@@ -1,0 +1,46 @@
+"""Table 3 -- end-to-end LDBC-SNB workloads: IS-3 / IC-8 / BI-2,
+GraphAr hand-written vs Acero-like join plans, wall time + ESSD model."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import IOMeter
+from repro.core.query import (bi2_acero, bi2_graphar, build_snb_baseline,
+                              build_snb_graphar, ic8_acero, ic8_graphar,
+                              is3_acero, is3_graphar)
+from repro.core.storage import ESSD
+
+from .graphs import snb
+from .util import emit, timeit
+
+
+def run() -> None:
+    data = snb(scale=2)
+    g = build_snb_graphar(data)
+    base = build_snb_baseline(data)
+    deg = np.bincount(data.knows_src, minlength=data.num_persons)
+    person = int(np.argmax(deg))
+    creator = int(np.argmax(np.bincount(data.has_creator_person,
+                                        minlength=data.num_persons)))
+
+    cases = {
+        "is3": (lambda m=None: is3_graphar(g, person, m),
+                lambda m=None: is3_acero(base, person, m)),
+        "ic8": (lambda m=None: ic8_graphar(g, creator, 20, m),
+                lambda m=None: ic8_acero(base, creator, 20, m)),
+        "bi2": (lambda m=None: bi2_graphar(g, "TagClass1", m),
+                lambda m=None: bi2_acero(base, "TagClass1", m)),
+    }
+    for qname, (gar_fn, acero_fn) in cases.items():
+        t_gar = timeit(gar_fn, repeats=3) / 1e6
+        t_ace = timeit(acero_fn, repeats=3) / 1e6
+        m_gar, m_ace = IOMeter(), IOMeter()
+        gar_fn(m_gar)
+        acero_fn(m_ace)
+        e_gar = t_gar + m_gar.seconds(ESSD)
+        e_ace = t_ace + m_ace.seconds(ESSD)
+        emit(f"table3_{qname}_acero", t_ace * 1e6,
+             f"essd_total_s={e_ace:.4f}")
+        emit(f"table3_{qname}_graphar", t_gar * 1e6,
+             f"essd_total_s={e_gar:.4f};cpu_speedup={t_ace/t_gar:.1f}x;"
+             f"essd_speedup={e_ace/e_gar:.1f}x")

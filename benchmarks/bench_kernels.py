@@ -1,0 +1,51 @@
+"""Kernel decode-path microbenchmarks.
+
+NOTE: Pallas runs here in interpret mode (CPU container) -- wall times
+characterize the *harness*, not TPU performance; TPU perf is covered by
+the roofline analysis.  The numpy-codec numbers are the storage-plane
+baseline the kernels are validated against."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.encoding import delta_encode_column, rle_encode_bool
+from repro.core.pac import PAC
+from repro.kernels.bitmap_select import ops as bso
+from repro.kernels.pac_decode import ops as pdo
+from repro.kernels.rle_filter import ops as rfo
+
+from .util import emit, timeit
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    ids = np.sort(rng.integers(0, 1 << 22, size=200_000))
+    col = delta_encode_column(ids, 2048)
+    n_pages = len(col.pages)
+
+    t_np = timeit(lambda: pdo.decode_pages(col, 0, n_pages,
+                                           use_pallas=False), repeats=3)
+    t_pl = timeit(lambda: pdo.decode_pages(col, 0, n_pages,
+                                           use_pallas=True), repeats=3)
+    emit("kern_delta_decode_jnp_ref", t_np, f"pages={n_pages}")
+    emit("kern_delta_decode_pallas_interp", t_pl, "interpret=1")
+
+    dense = rng.random(500_000) < 0.2
+    rle = rle_encode_bool(dense)
+    t_np = timeit(lambda: rfo.rle_to_bitmap(rle, True, use_pallas=False),
+                  repeats=3)
+    t_pl = timeit(lambda: rfo.rle_to_bitmap(rle, True, use_pallas=True),
+                  repeats=3)
+    emit("kern_rle_filter_jnp_ref", t_np, f"runs={rle.n_runs}")
+    emit("kern_rle_filter_pallas_interp", t_pl, "interpret=1")
+
+    vals = rng.standard_normal(200_000).astype(np.float32)
+    sel = np.unique(rng.integers(0, len(vals), 5_000))
+    pac = PAC.from_ids(sel, 2048)
+    pages = {p: vals[p * 2048:(p + 1) * 2048] for p in pac.pages()}
+    t_np = timeit(lambda: bso.select_from_pages(pac, pages,
+                                                use_pallas=False), repeats=3)
+    t_pl = timeit(lambda: bso.select_from_pages(pac, pages,
+                                                use_pallas=True), repeats=3)
+    emit("kern_bitmap_select_jnp_ref", t_np, f"sel={len(sel)}")
+    emit("kern_bitmap_select_pallas_interp", t_pl, "interpret=1")

@@ -1,0 +1,47 @@
+"""Fig. 14 -- execution time vs number of OR'ed labels.
+
+Reproduces the paper's crossover: the merge-based interval method wins
+while merged-interval counts stay small, and degrades past the point where
+nearly every vertex boundary becomes a breakpoint (scattered labels),
+where the per-vertex binary(RLE) scan catches up."""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from repro.core import L, VertexTypeSchema, filter_binary_columns, \
+    filter_rle_interval
+from repro.core.vertex import LABEL_ENC_RLE, VertexTable
+from repro.data.synthetic import clustered_labels, scattered_labels
+
+from .util import emit, timeit
+
+
+def _or_chain(names):
+    cond = L(names[0])
+    for m in names[1:]:
+        cond = cond | L(m)
+    return cond
+
+
+def run() -> None:
+    n = 60_000
+    for kind, gen in (("clustered", clustered_labels),
+                      ("scattered", scattered_labels)):
+        k = 32
+        names = [f"L{i}" for i in range(k)]
+        if kind == "clustered":
+            cols = gen(n, names, density=0.15, run_scale=1024, seed=3)
+        else:
+            cols = gen(n, names, density=0.15, seed=3)
+        schema = VertexTypeSchema("v", [], labels=names)
+        vt = VertexTable.build(schema, {}, cols, LABEL_ENC_RLE,
+                               num_vertices=n)
+        for i in (1, 2, 4, 8, 16, 32):
+            cond = _or_chain(names[:i])
+            t_int = timeit(lambda: filter_rle_interval(vt, cond), repeats=3)
+            t_scan = timeit(lambda: filter_binary_columns(vt, cond),
+                            repeats=3)
+            emit(f"fig14_scaling_{kind}_k{i}_interval", t_int,
+                 f"scan_us={t_scan:.1f};interval_wins={int(t_int < t_scan)}")

@@ -1,0 +1,25 @@
+"""Fig. 11 -- label storage: string vs binary(plain) vs binary(RLE)."""
+from __future__ import annotations
+
+from repro.core import VertexTypeSchema
+from repro.core.vertex import (LABEL_ENC_PLAIN, LABEL_ENC_RLE,
+                               LABEL_ENC_STRING, VertexTable)
+
+from .graphs import LABEL_GRAPHS, labels
+from .util import emit
+
+
+def run() -> None:
+    for name in LABEL_GRAPHS:
+        n, names, cols = labels(name)
+        schema = VertexTypeSchema("v", [], labels=names)
+        sizes = {}
+        for enc in (LABEL_ENC_STRING, LABEL_ENC_PLAIN, LABEL_ENC_RLE):
+            vt = VertexTable.build(schema, {}, cols, enc, num_vertices=n)
+            sizes[enc] = vt.labels_nbytes()
+        emit(f"fig11_labels_{name}_string_bytes", 0.0, str(sizes["string"]))
+        emit(f"fig11_labels_{name}_binary_plain_bytes", 0.0,
+             str(sizes["plain"]))
+        emit(f"fig11_labels_{name}_binary_rle_bytes", 0.0,
+             f"{sizes['rle']};vs_string={sizes['rle']/sizes['string']:.4f};"
+             f"vs_plain={sizes['rle']/sizes['plain']:.4f}")

@@ -1,0 +1,58 @@
+"""Table 2 -- storage media: tmpfs / ESSD / OSS modeled execution.
+
+Per the paper's setting the data lake is I/O-bound: modeled seconds =
+decode wall time + IOMeter bytes/requests through each medium's
+bandwidth/latency (ESSD = the paper's measured 180 MB/s PL0 volume)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (BY_SRC, ENC_GRAPHAR, ENC_PLAIN, IOMeter, L,
+                        VertexTypeSchema, build_adjacency, degrees_topk,
+                        filter_rle_interval, filter_string,
+                        retrieve_neighbors, retrieve_neighbors_scan)
+from repro.core.storage import MEDIA
+from repro.core.vertex import (LABEL_ENC_RLE, LABEL_ENC_STRING, VertexTable)
+
+from .graphs import labels, topology
+from .util import emit, timeit
+
+
+def run() -> None:
+    n, src, dst = topology("WK")
+    plain = build_adjacency(src, dst, n, n, BY_SRC, ENC_PLAIN)
+    graphar = build_adjacency(src, dst, n, n, BY_SRC, ENC_GRAPHAR)
+    v = int(degrees_topk(graphar)[0])
+
+    ln, names, cols = labels("MA")
+    schema = VertexTypeSchema("v", [], labels=names)
+    vt_str = VertexTable.build(schema, {}, cols, LABEL_ENC_STRING,
+                               num_vertices=ln)
+    vt_rle = VertexTable.build(schema, {}, cols, LABEL_ENC_RLE,
+                               num_vertices=ln)
+
+    m_pl, m_gar = IOMeter(), IOMeter()
+    t_pl = timeit(lambda: retrieve_neighbors_scan(plain, v, 2048, None),
+                  repeats=3) / 1e6
+    retrieve_neighbors_scan(plain, v, 2048, m_pl)
+    t_gar = timeit(lambda: retrieve_neighbors(graphar, v, 2048, None)) / 1e6
+    retrieve_neighbors(graphar, v, 2048, m_gar)
+
+    m_str, m_int = IOMeter(), IOMeter()
+    t_str = timeit(lambda: filter_string(vt_str, L(names[0])),
+                   repeats=3) / 1e6
+    filter_string(vt_str, L(names[0]), m_str)
+    t_int = timeit(lambda: filter_rle_interval(vt_rle, L(names[0]))) / 1e6
+    filter_rle_interval(vt_rle, L(names[0]), m_int)
+
+    for mname, media in MEDIA.items():
+        nr_pl = t_pl + m_pl.seconds(media)
+        nr_gar = t_gar + m_gar.seconds(media)
+        lf_str = t_str + m_str.seconds(media)
+        lf_int = t_int + m_int.seconds(media)
+        emit(f"table2_{mname}_neighbor_plain_s", nr_pl * 1e6, "")
+        emit(f"table2_{mname}_neighbor_graphar_s", nr_gar * 1e6,
+             f"speedup={nr_pl/nr_gar:.1f}x")
+        emit(f"table2_{mname}_label_string_s", lf_str * 1e6, "")
+        emit(f"table2_{mname}_label_graphar_s", lf_int * 1e6,
+             f"speedup={lf_str/lf_int:.1f}x")

@@ -1,0 +1,54 @@
+"""Fig. 9 -- neighbor retrieval time: plain scan / +offset / GraphAr
+(delta decode), plus the Pallas fused-decode engine and the modeled ESSD
+I/O seconds (the paper's data-lake setting is I/O-bound)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (BY_SRC, ENC_GRAPHAR, ENC_OFFSET, ENC_PLAIN, IOMeter,
+                        build_adjacency, degrees_topk, retrieve_neighbors,
+                        retrieve_neighbors_scan)
+from repro.core.storage import ESSD
+
+from .graphs import TOPOLOGY_GRAPHS, topology
+from .util import emit, timeit
+
+
+def run() -> None:
+    for name in TOPOLOGY_GRAPHS:
+        n, src, dst = topology(name)
+        plain = build_adjacency(src, dst, n, n, BY_SRC, ENC_PLAIN)
+        offset = build_adjacency(src, dst, n, n, BY_SRC, ENC_OFFSET)
+        graphar = build_adjacency(src, dst, n, n, BY_SRC, ENC_GRAPHAR)
+        v = int(degrees_topk(offset)[0])
+
+        t_scan = timeit(lambda: retrieve_neighbors_scan(plain, v, 2048),
+                        repeats=3)
+        t_off = timeit(lambda: retrieve_neighbors(offset, v, 2048))
+        t_gar = timeit(lambda: retrieve_neighbors(graphar, v, 2048))
+        t_pal = timeit(lambda: retrieve_neighbors(graphar, v, 2048,
+                                                  engine="pallas"),
+                       repeats=3)
+
+        m_scan, m_off, m_gar = IOMeter(), IOMeter(), IOMeter()
+        retrieve_neighbors_scan(plain, v, 2048, m_scan)
+        retrieve_neighbors(offset, v, 2048, m_off)
+        retrieve_neighbors(graphar, v, 2048, m_gar)
+        io_scan = m_scan.seconds(ESSD)
+        io_off = m_off.seconds(ESSD)
+        io_gar = m_gar.seconds(ESSD)
+
+        emit(f"fig9_neighbor_{name}_plain_scan", t_scan,
+             f"essd_io_s={io_scan:.5f}")
+        emit(f"fig9_neighbor_{name}_plain_offset", t_off,
+             f"essd_io_s={io_off:.5f};speedup_vs_scan={t_scan/t_off:.1f}")
+        emit(f"fig9_neighbor_{name}_graphar", t_gar,
+             f"essd_io_s={io_gar:.5f};io_speedup_vs_offset="
+             f"{io_off/io_gar:.2f}")
+        emit(f"fig9_neighbor_{name}_graphar_pallas", t_pal,
+             "interpret_mode=1")
+        # end-to-end modeled (I/O + decode) speedup, the paper's headline
+        e2e_plain = io_scan + t_scan / 1e6
+        e2e_gar = io_gar + t_gar / 1e6
+        emit(f"fig9_neighbor_{name}_e2e_modeled_speedup", 0.0,
+             f"{e2e_plain/e2e_gar:.1f}x")

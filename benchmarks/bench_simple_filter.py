@@ -1,0 +1,42 @@
+"""Fig. 12 -- simple-condition label filtering across the four methods."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import L, VertexTypeSchema, filter_binary_columns, \
+    filter_rle_interval, filter_string, intervals_to_ids
+from repro.core.vertex import (LABEL_ENC_PLAIN, LABEL_ENC_RLE,
+                               LABEL_ENC_STRING, VertexTable)
+
+from .graphs import LABEL_GRAPHS, labels
+from .util import emit, timeit
+
+
+def run() -> None:
+    for name in LABEL_GRAPHS:
+        n, names, cols = labels(name)
+        schema = VertexTypeSchema("v", [], labels=names)
+        vts = {enc: VertexTable.build(schema, {}, cols, enc, num_vertices=n)
+               for enc in (LABEL_ENC_STRING, LABEL_ENC_PLAIN, LABEL_ENC_RLE)}
+        # median label (paper reports the middle value across labels)
+        times = {m: [] for m in ("string", "plain", "rle_scan", "interval")}
+        for label in names:
+            cond = L(label)
+            times["string"].append(
+                timeit(lambda: filter_string(vts["string"], cond),
+                       repeats=3))
+            times["plain"].append(
+                timeit(lambda: filter_binary_columns(vts["plain"], cond)))
+            times["rle_scan"].append(
+                timeit(lambda: filter_binary_columns(vts["rle"], cond)))
+            times["interval"].append(
+                timeit(lambda: filter_rle_interval(vts["rle"], cond)))
+        med = {m: float(np.median(v)) for m, v in times.items()}
+        emit(f"fig12_simple_{name}_string", med["string"], "")
+        emit(f"fig12_simple_{name}_binary_plain", med["plain"],
+             f"speedup_vs_string={med['string']/med['plain']:.1f}")
+        emit(f"fig12_simple_{name}_binary_rle", med["rle_scan"],
+             f"speedup_vs_string={med['string']/med['rle_scan']:.1f}")
+        emit(f"fig12_simple_{name}_interval", med["interval"],
+             f"speedup_vs_string={med['string']/med['interval']:.1f};"
+             f"speedup_vs_rle={med['rle_scan']/med['interval']:.1f}")

@@ -1,0 +1,23 @@
+"""Fig. 8 -- topology storage: plain vs plain+offset vs GraphAr (delta)."""
+from __future__ import annotations
+
+from repro.core import BY_SRC, ENC_GRAPHAR, ENC_OFFSET, ENC_PLAIN, \
+    build_adjacency
+
+from .graphs import TOPOLOGY_GRAPHS, topology
+from .util import emit
+
+
+def run() -> None:
+    for name in TOPOLOGY_GRAPHS:
+        n, src, dst = topology(name)
+        plain = build_adjacency(src, dst, n, n, BY_SRC, ENC_PLAIN)
+        offset = build_adjacency(src, dst, n, n, BY_SRC, ENC_OFFSET)
+        graphar = build_adjacency(src, dst, n, n, BY_SRC, ENC_GRAPHAR)
+        b_p = plain.topology_nbytes()
+        b_o = offset.topology_nbytes()
+        b_g = graphar.topology_nbytes()
+        emit(f"fig8_storage_{name}_plain_bytes", 0.0, str(b_p))
+        emit(f"fig8_storage_{name}_plain_offset_bytes", 0.0, str(b_o))
+        emit(f"fig8_storage_{name}_graphar_bytes", 0.0,
+             f"{b_g};ratio_vs_plain_offset={b_g/b_o:.3f}")

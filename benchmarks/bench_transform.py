@@ -1,0 +1,30 @@
+"""Fig. 10 -- data transformation breakdown: sort / offset / output."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (EdgeTypeSchema, GraphArBuilder, PropertySchema,
+                        VertexTypeSchema)
+
+from .graphs import topology
+from .util import emit
+
+
+def run() -> None:
+    for name in ("WK", "HW"):
+        n, src, dst = topology(name)
+        b = GraphArBuilder(name)
+        b.add_vertices(VertexTypeSchema("v", []), {}, num_vertices=n)
+        t0 = time.perf_counter()
+        b.add_edges(EdgeTypeSchema("v", "e", "v",
+                                   adjacency=["by_src", "by_dst"]),
+                    src, dst)
+        total = time.perf_counter() - t0
+        t = b.timing
+        eps = len(src) * 2 / max(total, 1e-9)  # two layouts
+        emit(f"fig10_transform_{name}_sort", t.sort * 1e6, "")
+        emit(f"fig10_transform_{name}_offset", t.offset * 1e6, "")
+        emit(f"fig10_transform_{name}_output", t.output * 1e6, "")
+        emit(f"fig10_transform_{name}_edges_per_s", 0.0, f"{eps:.0f}")

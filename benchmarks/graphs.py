@@ -1,0 +1,51 @@
+"""Shared benchmark graphs (Table 1 stand-ins, scaled for CPU wall-time).
+
+The paper's graphs range to billions of edges; these keep the same
+*statistical shape* (power-law degrees, ID locality, clustered labels) at
+CPU-friendly sizes.  Abbreviations mirror Table 1 spirit.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.data.synthetic import (clustered_labels, ldbc_like, powerlaw_graph,
+                                  scattered_labels)
+
+TOPOLOGY_GRAPHS = {
+    # name: (num_vertices, avg_degree, locality)
+    "CI": (50_000, 5, 0.85),      # citations-like
+    "OL": (100_000, 8, 0.80),     # offshore-leaks-like
+    "HW": (60_000, 40, 0.90),     # hollywood-like (dense)
+    "WK": (150_000, 12, 0.75),    # wiki-like
+}
+
+LABEL_GRAPHS = {
+    # name: (num_vertices, labels, density, run_scale)
+    "BL": (40_000, 8, 0.25, 512),
+    "AX": (80_000, 6, 0.30, 1024),
+    "MA": (120_000, 16, 0.20, 256),
+    "PO": (30_000, 4, 0.35, 2048),
+}
+
+
+@functools.lru_cache(maxsize=None)
+def topology(name: str) -> Tuple[int, np.ndarray, np.ndarray]:
+    n, deg, loc = TOPOLOGY_GRAPHS[name]
+    src, dst = powerlaw_graph(n, deg, locality=loc, seed=hash(name) % 997)
+    return n, src, dst
+
+
+@functools.lru_cache(maxsize=None)
+def labels(name: str):
+    n, k, dens, run = LABEL_GRAPHS[name]
+    names = [f"L{i}" for i in range(k)]
+    return n, names, clustered_labels(n, names, density=dens,
+                                      run_scale=run, seed=hash(name) % 991)
+
+
+@functools.lru_cache(maxsize=None)
+def snb(scale: int = 1):
+    return ldbc_like(scale=scale, seed=0)

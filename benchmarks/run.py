@@ -1,0 +1,46 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Emits ``name,us_per_call,derived`` CSV.  See EXPERIMENTS.md for the
+mapping to the paper's Figures 8-14 and Tables 2-3.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from . import (bench_complex_filter, bench_e2e, bench_kernels,
+               bench_label_scaling, bench_label_storage, bench_media,
+               bench_neighbor, bench_pipeline, bench_simple_filter,
+               bench_storage, bench_transform)
+from .util import header
+
+SUITES = {
+    "fig8_storage": bench_storage.run,
+    "fig9_neighbor": bench_neighbor.run,
+    "fig10_transform": bench_transform.run,
+    "fig11_label_storage": bench_label_storage.run,
+    "fig12_simple_filter": bench_simple_filter.run,
+    "fig13_complex_filter": bench_complex_filter.run,
+    "fig14_label_scaling": bench_label_scaling.run,
+    "table2_media": bench_media.run,
+    "table3_e2e": bench_e2e.run,
+    "pipeline": bench_pipeline.run,
+    "kernels": bench_kernels.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    names = (args.only.split(",") if args.only else list(SUITES))
+    header()
+    t0 = time.perf_counter()
+    for name in names:
+        SUITES[name]()
+    print(f"# total_wall_s={time.perf_counter()-t0:.1f}", flush=True)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,3 @@
+"""repro: GraphAr (Li et al., 2023) as the data-lake substrate of a
+multi-pod JAX LM training/serving framework.  See README.md."""
+__version__ = "1.0.0"

@@ -1,0 +1,305 @@
+"""Page-level codecs for GraphAr columns.
+
+Three encodings, mirroring the paper (§3-§5):
+
+* ``plain``      -- raw little-endian values (Parquet PLAIN).
+* ``delta``      -- Parquet-style DELTA_BINARY_PACKED: per page, a first
+                    value followed by miniblocks of 32 deltas; each miniblock
+                    subtracts its own ``min_delta`` and bitpacks the residuals
+                    with a per-miniblock bit width restricted to powers of two
+                    (``{0,1,2,4,8,16,32}``) so that packed values never
+                    straddle 32-bit word boundaries.  The paper requires
+                    power-of-two widths "for data alignment purposes"; the
+                    same restriction is what makes the TPU kernel's vectorized
+                    variable-shift unpack possible (see kernels/pac_decode).
+* ``rle``        -- boolean run-length encoding as an *interval position
+                    list* ``P`` plus the first value (paper §5.1): run ``i``
+                    covers ``[P[i], P[i+1])`` and has value
+                    ``first_value ^ (i & 1)``.
+
+All codecs are pure numpy (the storage plane); JAX/Pallas decode fast paths
+live in ``repro.kernels`` and are validated against these.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import numpy as np
+
+# Rows per data page.  2048 rows x 4B ids = 8 KiB of packed payload upper
+# bound per page; bitmap for a page = 2048 bits = 64 uint32 words (one
+# (8, 128)-lane VPU tile holds 16 pages' bitmaps).  Configurable per file.
+DEFAULT_PAGE_SIZE = 2048
+MINIBLOCK = 32
+
+#: Bit widths allowed for delta miniblocks (powers of two only).
+ALLOWED_WIDTHS = (0, 1, 2, 4, 8, 16, 32)
+
+ENC_PLAIN = "plain"
+ENC_DELTA = "delta"
+ENC_RLE = "rle"
+
+
+# --------------------------------------------------------------------------
+# bitpacking (vectorized, power-of-two widths only)
+# --------------------------------------------------------------------------
+
+def _round_up_width(nbits: int) -> int:
+    for w in ALLOWED_WIDTHS:
+        if nbits <= w:
+            return w
+    raise ValueError(f"required width {nbits} > 32")
+
+
+def bitpack(values: np.ndarray, bit_width: int) -> np.ndarray:
+    """Pack ``values`` (non-negative, < 2**bit_width) into a uint32 word array.
+
+    Values are laid out little-endian within each word; with power-of-two
+    widths exactly ``32 // bit_width`` values occupy one word and no value
+    straddles a word boundary.
+    """
+    if bit_width == 0:
+        return np.zeros(0, dtype=np.uint32)
+    if bit_width not in ALLOWED_WIDTHS:
+        raise ValueError(f"bit width {bit_width} not in {ALLOWED_WIDTHS}")
+    v = np.asarray(values, dtype=np.uint64)
+    if v.size and bit_width < 64:
+        assert int(v.max()) < (1 << bit_width), "value overflows bit width"
+    per_word = 32 // bit_width
+    pad = (-len(v)) % per_word
+    if pad:
+        v = np.concatenate([v, np.zeros(pad, dtype=np.uint64)])
+    v = v.reshape(-1, per_word)
+    shifts = (np.arange(per_word, dtype=np.uint64) * bit_width)
+    words = np.bitwise_or.reduce(v << shifts, axis=1)
+    return words.astype(np.uint32)
+
+
+def bitunpack(words: np.ndarray, bit_width: int, count: int) -> np.ndarray:
+    """Inverse of :func:`bitpack`; returns ``count`` uint32 values."""
+    if bit_width == 0:
+        return np.zeros(count, dtype=np.uint32)
+    per_word = 32 // bit_width
+    w = np.asarray(words, dtype=np.uint32)
+    idx = np.arange(count, dtype=np.int64)
+    word = w[idx // per_word].astype(np.uint64)
+    shift = ((idx % per_word) * bit_width).astype(np.uint64)
+    mask = np.uint64((1 << bit_width) - 1)
+    return ((word >> shift) & mask).astype(np.uint32)
+
+
+# --------------------------------------------------------------------------
+# delta (DELTA_BINARY_PACKED-style)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DeltaPage:
+    """One delta-encoded data page.
+
+    ``packed`` concatenates the miniblocks' word arrays;
+    ``word_offsets[i]`` is the starting word of miniblock ``i``.
+    """
+
+    count: int
+    first_value: int
+    min_deltas: np.ndarray     # int64 [n_mini]
+    bit_widths: np.ndarray     # uint8 [n_mini]
+    word_offsets: np.ndarray   # int32 [n_mini]
+    packed: np.ndarray         # uint32 [n_words]
+
+    def nbytes(self) -> int:
+        # Physical layout cost: header (count, first) + per-miniblock
+        # (min_delta varint approximated as 4B, width 1B) + packed words.
+        return (12 + self.min_deltas.size * 5 + self.packed.nbytes)
+
+    def max_bit_width(self) -> int:
+        return int(self.bit_widths.max()) if self.bit_widths.size else 0
+
+
+def delta_encode_page(values: np.ndarray) -> DeltaPage:
+    v = np.asarray(values, dtype=np.int64)
+    n = len(v)
+    if n == 0:
+        return DeltaPage(0, 0, np.zeros(0, np.int64), np.zeros(0, np.uint8),
+                         np.zeros(0, np.int32), np.zeros(0, np.uint32))
+    deltas = np.diff(v)  # n-1 deltas
+    n_mini = max(1, -(-len(deltas) // MINIBLOCK))
+    min_deltas = np.zeros(n_mini, np.int64)
+    widths = np.zeros(n_mini, np.uint8)
+    offsets = np.zeros(n_mini, np.int32)
+    chunks: List[np.ndarray] = []
+    woff = 0
+    for i in range(n_mini):
+        blk = deltas[i * MINIBLOCK:(i + 1) * MINIBLOCK]
+        if blk.size == 0:
+            continue
+        lo = int(blk.min())
+        resid = (blk - lo).astype(np.uint64)
+        hi = int(resid.max())
+        bw = _round_up_width(int(hi).bit_length())
+        min_deltas[i] = lo
+        widths[i] = bw
+        offsets[i] = woff
+        words = bitpack(resid, bw)
+        chunks.append(words)
+        woff += len(words)
+    packed = (np.concatenate(chunks) if chunks else np.zeros(0, np.uint32))
+    return DeltaPage(n, int(v[0]), min_deltas, widths, offsets, packed)
+
+
+def delta_decode_page(page: DeltaPage) -> np.ndarray:
+    """Pure-numpy decode, fully vectorized (same gather+variable-shift
+    unpack as the Pallas kernel: power-of-two widths never straddle words).
+    """
+    if page.count == 0:
+        return np.zeros(0, np.int64)
+    n_deltas = page.count - 1
+    if n_deltas == 0:
+        return np.array([page.first_value], np.int64)
+    idx = np.arange(n_deltas, dtype=np.int64)
+    mini = idx // MINIBLOCK
+    within = idx % MINIBLOCK
+    bw = page.bit_widths[mini].astype(np.int64)
+    bit_pos = within * bw
+    word_idx = page.word_offsets[mini].astype(np.int64) + bit_pos // 32
+    if page.packed.size:
+        word_idx = np.minimum(word_idx, page.packed.size - 1)
+        words = page.packed[word_idx].astype(np.uint64)
+    else:
+        words = np.zeros(n_deltas, np.uint64)
+    shift = (bit_pos % 32).astype(np.uint64)
+    mask = np.where(bw >= 32, np.uint64(0xFFFFFFFF),
+                    (np.uint64(1) << bw.astype(np.uint64))
+                    - np.uint64(1))
+    resid = ((words >> shift) & mask).astype(np.int64)
+    resid[bw == 0] = 0
+    deltas = resid + page.min_deltas[mini]
+    out = np.empty(page.count, np.int64)
+    out[0] = page.first_value
+    np.cumsum(deltas, out=out[1:])
+    out[1:] += page.first_value
+    return out
+
+
+# --------------------------------------------------------------------------
+# RLE for boolean label columns (interval position lists)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RleColumn:
+    """Whole-column RLE of a boolean array as interval positions.
+
+    ``positions`` = [0, p1, p2, ..., n]; run ``i`` spans
+    ``[positions[i], positions[i+1])`` with value ``first_value ^ (i & 1)``.
+    """
+
+    count: int
+    first_value: bool
+    positions: np.ndarray  # int64 [n_runs + 1]
+
+    def nbytes(self) -> int:
+        # 4B per position (ids < 2^32 in our graphs) + 1B header
+        return 4 * self.positions.size + 5
+
+    @property
+    def n_runs(self) -> int:
+        return max(0, self.positions.size - 1)
+
+    def interval_starts(self, value: bool) -> Tuple[np.ndarray, np.ndarray]:
+        """Intervals (starts, ends) where the column equals ``value``.
+
+        Paper §5.1: "simply select all odd intervals or all even intervals".
+        """
+        p = self.positions
+        start_idx = 0 if (value == self.first_value) else 1
+        starts = p[start_idx:-1:2]
+        ends = p[start_idx + 1::2]
+        return starts, ends
+
+
+def rle_encode_bool(values: np.ndarray) -> RleColumn:
+    v = np.asarray(values, dtype=bool)
+    n = len(v)
+    if n == 0:
+        return RleColumn(0, False, np.zeros(1, np.int64))
+    change = np.flatnonzero(v[1:] != v[:-1]) + 1
+    positions = np.concatenate([[0], change, [n]]).astype(np.int64)
+    return RleColumn(n, bool(v[0]), positions)
+
+
+def rle_decode_bool(col: RleColumn) -> np.ndarray:
+    out = np.zeros(col.count, dtype=bool)
+    starts, ends = col.interval_starts(True)
+    for s, e in zip(starts, ends):
+        out[s:e] = True
+    return out
+
+
+# --------------------------------------------------------------------------
+# plain
+# --------------------------------------------------------------------------
+
+def plain_encode(values: np.ndarray) -> bytes:
+    return np.ascontiguousarray(values).tobytes()
+
+
+def plain_decode(buf: bytes, dtype: np.dtype, count: int) -> np.ndarray:
+    return np.frombuffer(buf, dtype=dtype, count=count)
+
+
+# --------------------------------------------------------------------------
+# column-level delta encode/decode over pages
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DeltaColumn:
+    count: int
+    page_size: int
+    pages: List[DeltaPage]
+
+    def nbytes(self) -> int:
+        return sum(p.nbytes() for p in self.pages)
+
+
+def delta_encode_column(values: np.ndarray,
+                        page_size: int = DEFAULT_PAGE_SIZE) -> DeltaColumn:
+    v = np.asarray(values, dtype=np.int64)
+    pages = [delta_encode_page(v[i:i + page_size])
+             for i in range(0, max(len(v), 1), page_size)]
+    if len(v) == 0:
+        pages = [delta_encode_page(v)]
+    return DeltaColumn(len(v), page_size, pages)
+
+
+def delta_decode_column(col: DeltaColumn) -> np.ndarray:
+    if col.count == 0:
+        return np.zeros(0, np.int64)
+    return np.concatenate([delta_decode_page(p) for p in col.pages])
+
+
+def delta_decode_range(col: DeltaColumn, lo: int, hi: int) -> np.ndarray:
+    """Decode rows [lo, hi) touching only the pages that overlap the range.
+
+    This is the access pattern of neighbor retrieval: the <offset> index
+    gives an edge-row range; only the overlapping delta pages are loaded
+    and decoded (the bytes-touched accounting in storage.py keys off the
+    pages visited here).
+    """
+    if hi <= lo:
+        return np.zeros(0, np.int64)
+    ps = col.page_size
+    p0, p1 = lo // ps, (hi - 1) // ps
+    parts = [delta_decode_page(col.pages[p]) for p in range(p0, p1 + 1)]
+    joined = np.concatenate(parts)
+    return joined[lo - p0 * ps: hi - p0 * ps]
+
+
+def pages_touched(col: DeltaColumn, lo: int, hi: int) -> Tuple[int, int, int]:
+    """(first_page, last_page_exclusive, bytes) for a row range."""
+    if hi <= lo:
+        return 0, 0, 0
+    ps = col.page_size
+    p0, p1 = lo // ps, (hi - 1) // ps + 1
+    nbytes = sum(col.pages[p].nbytes() for p in range(p0, p1))
+    return p0, p1, nbytes

@@ -1,0 +1,100 @@
+"""Neighbor retrieval (paper §4, Definitions 1-2).
+
+Given vertex ``v``:
+  1. the ``<offset>`` index gives the edge-row range ``[lo, hi)``;
+  2. only the delta pages of the value column overlapping that range are
+     loaded and decoded (I/O metered);
+  3. decoded neighbor IDs are grouped into a :class:`PAC` over the *target
+     vertex table's* pages, each collection a bitmap;
+  4. property fetch touches only the pages with non-empty collections and
+     selects within each page by bitmap (selection pushdown, §4.3).
+
+The decode step has three interchangeable engines:
+  * ``numpy``  -- the storage-plane oracle (encoding.py),
+  * ``jax``    -- jnp reference (kernels/pac_decode/ref.py),
+  * ``pallas`` -- fused unpack->scan->bitmap TPU kernel (interpret-mode on
+                  CPU), the adaptation of the paper's BMI/SIMD decoder.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .edge import AdjacencyTable
+from .pac import PAC
+from .vertex import VertexTable
+
+
+def retrieve_neighbors(adj: AdjacencyTable, v: int,
+                       target_page_size: int,
+                       meter=None,
+                       engine: str = "numpy") -> PAC:
+    """Definition 2: PAC of the neighbor IDs of ``v``."""
+    lo, hi = adj.edge_range(v, meter)
+    if hi <= lo:
+        return PAC(target_page_size)
+    if engine == "numpy":
+        ids = np.asarray(
+            adj.table[adj.value_col].read_range(lo, hi, meter), np.int64)
+        return PAC.from_ids(ids, target_page_size)
+    # kernel engines decode pages directly to bitmaps without materializing
+    # the id list in HBM; they share the same metering (pages touched).
+    from repro.kernels.pac_decode import ops as pac_ops
+    col = adj.table[adj.value_col]
+    from .table import DeltaIntColumn
+    if not isinstance(col, DeltaIntColumn):
+        raise TypeError("kernel engines require a delta-encoded column")
+    return pac_ops.retrieve_pac(col.encoded, lo, hi, target_page_size,
+                                meter=meter,
+                                use_pallas=(engine == "pallas"))
+
+
+def retrieve_neighbors_scan(adj: AdjacencyTable, v: int,
+                            target_page_size: int, meter=None) -> PAC:
+    """Baseline 'plain': no offset index -- scan the whole edge table."""
+    ids = adj.neighbor_ids_scan(v, meter)
+    return PAC.from_ids(ids, target_page_size)
+
+
+def fetch_properties(pac: PAC, vt: VertexTable, prop: str,
+                     meter=None) -> np.ndarray:
+    """Selection pushdown: fetch ``prop`` for exactly the PAC's IDs."""
+    pages = pac.pages()
+    page_vals = vt.read_property_pages(prop, pages, meter)
+    return pac.select(page_vals)
+
+
+def neighbor_properties(adj: AdjacencyTable, v: int, vt: VertexTable,
+                        prop: str, meter=None,
+                        engine: str = "numpy") -> np.ndarray:
+    """End-to-end §4.1 workflow: ids -> PAC -> per-page pushdown fetch."""
+    pac = retrieve_neighbors(adj, v, vt.page_size, meter, engine)
+    return fetch_properties(pac, vt, prop, meter)
+
+
+def k_hop(adj: AdjacencyTable, seeds: np.ndarray, hops: int,
+          meter=None) -> np.ndarray:
+    """Multi-hop expansion (IC-8-style traversals). Returns unique IDs."""
+    frontier = np.unique(np.asarray(seeds, np.int64))
+    seen = frontier
+    for _ in range(hops):
+        nxt: List[np.ndarray] = []
+        for v in frontier:
+            nxt.append(adj.neighbor_ids(int(v), meter))
+        if not nxt:
+            break
+        frontier = np.setdiff1d(np.unique(np.concatenate(nxt)), seen,
+                                assume_unique=True)
+        seen = np.union1d(seen, frontier)
+        if frontier.size == 0:
+            break
+    return seen
+
+
+def degrees_topk(adj: AdjacencyTable, k: int = 1) -> np.ndarray:
+    """Vertices with the largest degree (paper §6.2.2 queries these)."""
+    deg = adj.degrees()
+    if k == 1:
+        return np.array([int(np.argmax(deg))])
+    return np.argsort(deg)[::-1][:k].astype(np.int64)

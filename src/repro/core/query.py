@@ -1,0 +1,271 @@
+"""End-to-end LDBC-SNB-style workloads (paper §6.5): IS-3, IC-8, BI-2.
+
+Each query has two implementations with identical results:
+
+* ``*_graphar`` -- hand-written over the GraphAr APIs, exercising neighbor
+  retrieval (offset + delta + PAC pushdown) and interval label filtering;
+* ``*_acero``   -- the baseline over plain/unsorted tables via the
+  scan/filter/hash-join/aggregate operators in :mod:`repro.core.acero`.
+
+Graph layout (built by :func:`build_snb_graphar` from a
+:class:`repro.data.synthetic.SnbGraph`):
+
+  vertex types : person(firstName, birthday; labels Asian/Enrollee/Student)
+                 message(creationDate, length; labels TagClass*)
+                 tag(tagclass)
+  edge types   : person-knows-person       (prop creationDate; by_src+by_dst)
+                 message-hasCreator-person (by_src + by_dst)
+                 message-replyOf-message   (by_src + by_dst)
+                 message-hasTag-tag        (by_src + by_dst)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from . import acero
+from .builder import Graph, GraphArBuilder
+from .edge import BY_DST, BY_SRC, ENC_PLAIN, build_adjacency
+from .labels import L, filter_rle_interval, intervals_to_pac
+from .neighbor import fetch_properties, retrieve_neighbors
+from .pac import PAC
+from .schema import EdgeTypeSchema, PropertySchema, VertexTypeSchema
+from .storage import IOMeter
+from .vertex import LABEL_ENC_RLE, LABEL_ENC_STRING, VertexTable
+
+
+# --------------------------------------------------------------------------
+# construction
+# --------------------------------------------------------------------------
+
+def build_snb_graphar(snb, page_size: int = 2048) -> Graph:
+    b = GraphArBuilder("snb")
+    b.add_vertices(
+        VertexTypeSchema("person",
+                         [PropertySchema("firstName", "string"),
+                          PropertySchema("birthday", "int64")],
+                         labels=list(snb.person_labels),
+                         page_size=page_size),
+        {"firstName": snb.person_first_name, "birthday": snb.person_birthday},
+        snb.person_labels)
+    b.add_vertices(
+        VertexTypeSchema("message",
+                         [PropertySchema("creationDate", "int64"),
+                          PropertySchema("length", "int64")],
+                         labels=list(snb.message_labels),
+                         page_size=page_size),
+        {"creationDate": snb.message_creation, "length": snb.message_length},
+        snb.message_labels)
+    b.add_vertices(
+        VertexTypeSchema("tag", [PropertySchema("tagclass", "int64")],
+                         page_size=page_size),
+        {"tagclass": snb.tag_class_of_tag})
+    b.add_edges(EdgeTypeSchema("person", "knows", "person",
+                               [PropertySchema("creationDate", "int64")],
+                               adjacency=["by_src", "by_dst"],
+                               page_size=page_size),
+                snb.knows_src, snb.knows_dst,
+                {"creationDate": snb.knows_creation})
+    b.add_edges(EdgeTypeSchema("message", "hasCreator", "person",
+                               adjacency=["by_src", "by_dst"],
+                               page_size=page_size),
+                snb.has_creator_msg, snb.has_creator_person)
+    b.add_edges(EdgeTypeSchema("message", "replyOf", "message",
+                               adjacency=["by_src", "by_dst"],
+                               page_size=page_size),
+                snb.reply_of_src, snb.reply_of_dst)
+    b.add_edges(EdgeTypeSchema("message", "hasTag", "tag",
+                               adjacency=["by_src", "by_dst"],
+                               page_size=page_size),
+                snb.has_tag_msg, snb.has_tag_tag)
+    return b.build()
+
+
+@dataclasses.dataclass
+class SnbBaseline:
+    """Plain/unsorted tables + string labels for the Acero engine."""
+
+    person: VertexTable
+    message: VertexTable
+    tag: VertexTable
+    knows: "acero.Table"
+    has_creator: "acero.Table"
+    reply_of: "acero.Table"
+    has_tag: "acero.Table"
+
+
+def build_snb_baseline(snb, page_size: int = 2048) -> SnbBaseline:
+    from .table import PlainColumn, Table
+    person = VertexTable.build(
+        VertexTypeSchema("person",
+                         [PropertySchema("firstName", "string"),
+                          PropertySchema("birthday", "int64")],
+                         labels=list(snb.person_labels), page_size=page_size),
+        {"firstName": snb.person_first_name, "birthday": snb.person_birthday},
+        snb.person_labels, LABEL_ENC_STRING)
+    message = VertexTable.build(
+        VertexTypeSchema("message",
+                         [PropertySchema("creationDate", "int64"),
+                          PropertySchema("length", "int64")],
+                         labels=list(snb.message_labels),
+                         page_size=page_size),
+        {"creationDate": snb.message_creation, "length": snb.message_length},
+        snb.message_labels, LABEL_ENC_STRING)
+    tag = VertexTable.build(
+        VertexTypeSchema("tag", [PropertySchema("tagclass", "int64")],
+                         page_size=page_size),
+        {"tagclass": snb.tag_class_of_tag})
+
+    def coo(name, s, d, props=None):
+        t = Table(name, len(s), page_size)
+        t.add(PlainColumn("<src>", np.asarray(s, np.int64), page_size))
+        t.add(PlainColumn("<dst>", np.asarray(d, np.int64), page_size))
+        for k, v in (props or {}).items():
+            t.add(PlainColumn(k, np.asarray(v), page_size))
+        return t
+
+    return SnbBaseline(
+        person=person, message=message, tag=tag,
+        knows=coo("knows", snb.knows_src, snb.knows_dst,
+                  {"creationDate": snb.knows_creation}),
+        has_creator=coo("hasCreator", snb.has_creator_msg,
+                        snb.has_creator_person),
+        reply_of=coo("replyOf", snb.reply_of_src, snb.reply_of_dst),
+        has_tag=coo("hasTag", snb.has_tag_msg, snb.has_tag_tag))
+
+
+# --------------------------------------------------------------------------
+# IS-3: friends of a person with friendship creationDate, newest first
+# --------------------------------------------------------------------------
+
+def is3_graphar(g: Graph, person: int, meter: Optional[IOMeter] = None
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    adj = g.adjacency("person-knows-person", BY_SRC)
+    vt = g.vertex("person")
+    lo, hi = adj.edge_range(person, meter)
+    friends = np.asarray(adj.table["<dst>"].read_range(lo, hi, meter),
+                         np.int64)
+    dates = np.asarray(adj.table["creationDate"].read_range(lo, hi, meter),
+                       np.int64)
+    # bitmap-pushdown fetch of friend names (order restored by id below)
+    pac = PAC.from_ids(friends, vt.page_size)
+    _ = fetch_properties(pac, vt, "firstName", meter)
+    order = np.argsort(-dates, kind="stable")
+    return friends[order], dates[order]
+
+
+def is3_acero(b: SnbBaseline, person: int,
+              meter: Optional[IOMeter] = None
+              ) -> Tuple[np.ndarray, np.ndarray]:
+    rel = acero.scan(b.knows, ["<src>", "<dst>", "creationDate"], meter,
+                     predicate=("<src>", "==", person))
+    rel = acero.filter_rel(rel, rel["<src>"] == person)
+    names = acero.Relation({
+        "pid": np.arange(b.person.num_vertices, dtype=np.int64),
+        "firstName": np.asarray(
+            b.person.table["firstName"].read_all(meter), dtype=object)})
+    joined = acero.hash_join(rel, names, "<dst>", "pid")
+    joined = acero.order_by(joined, "creationDate", desc=True)
+    return joined["<dst>"], joined["creationDate"]
+
+
+# --------------------------------------------------------------------------
+# IC-8: latest 20 replies to any message created by `person`
+# --------------------------------------------------------------------------
+
+def ic8_graphar(g: Graph, person: int, limit: int = 20,
+                meter: Optional[IOMeter] = None
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    # hop 1: messages created by person  (hasCreator, incoming = by_dst)
+    created = g.adjacency("message-hasCreator-person", BY_DST) \
+        .neighbor_ids(person, meter)
+    # hop 2: replies to those messages (replyOf, incoming = by_dst),
+    # vectorized: one offsets read + page-dedup multi-range decode
+    reply_adj = g.adjacency("message-replyOf-message", BY_DST)
+    if created.size:
+        off_col = reply_adj.offsets["<offset>"]
+        los = np.asarray(off_col.read_rows_concat(created, created + 1,
+                                                  meter), np.int64)
+        his = np.asarray(off_col.read_rows_concat(created + 1, created + 2,
+                                                  meter), np.int64)
+        replies = np.unique(np.asarray(
+            reply_adj.table["<src>"].read_rows_concat(los, his, meter),
+            np.int64))
+    else:
+        replies = np.zeros(0, np.int64)
+    if replies.size == 0:
+        return replies, replies
+    # fetch reply creationDate via PAC pushdown; top-`limit` newest
+    vt = g.vertex("message")
+    pac = PAC.from_ids(replies, vt.page_size)
+    dates = np.asarray(fetch_properties(pac, vt, "creationDate", meter),
+                       np.int64)
+    ids = pac.to_ids()
+    order = np.lexsort((-ids, -dates))[:limit]
+    return ids[order], dates[order]
+
+
+def ic8_acero(b: SnbBaseline, person: int, limit: int = 20,
+              meter: Optional[IOMeter] = None
+              ) -> Tuple[np.ndarray, np.ndarray]:
+    created = acero.scan(b.has_creator, ["<src>", "<dst>"], meter,
+                         predicate=("<dst>", "==", person))
+    created = acero.filter_rel(created, created["<dst>"] == person)
+    replies = acero.scan(b.reply_of, ["<src>", "<dst>"], meter)
+    j = acero.hash_join(replies, created, "<dst>", "<src>")
+    reply_ids = np.unique(j["<src>"])
+    if reply_ids.size == 0:
+        return reply_ids, reply_ids
+    msg = acero.scan(b.message.table, ["creationDate"], meter)
+    dates = msg["creationDate"][reply_ids]
+    order = np.lexsort((-reply_ids, -dates))[:limit]
+    return reply_ids[order], dates[order]
+
+
+# --------------------------------------------------------------------------
+# BI-2: per-tag message counts within one tag class (label filtering)
+# --------------------------------------------------------------------------
+
+def bi2_graphar(g: Graph, tagclass: str,
+                meter: Optional[IOMeter] = None
+                ) -> Dict[int, int]:
+    msg_vt = g.vertex("message")
+    # interval label filter: messages labeled with the tag class
+    iv = filter_rle_interval(msg_vt, L(tagclass), meter)
+    starts, ends = iv
+    adj = g.adjacency("message-hasTag-tag", BY_SRC)
+    tag_vt = g.vertex("tag")
+    cls_id = int(tagclass.removeprefix("TagClass"))
+    tag_classes = np.asarray(tag_vt.table["tagclass"].read_all(meter))
+    if starts.size == 0:
+        return {}
+    # intervals of sorted messages -> contiguous edge-row ranges: one
+    # sequential read of the (small) offset column yields all bounds.
+    off = np.asarray(adj.offsets["<offset>"].read_all(meter), np.int64)
+    los, his = off[starts], off[ends]
+    # vectorized page-deduplicated decode of the delta-encoded <dst> column
+    tags = np.asarray(
+        adj.table["<dst>"].read_rows_concat(los, his, meter), np.int64)
+    tags = tags[tag_classes[tags] == cls_id]
+    keys, cnts = np.unique(tags, return_counts=True)
+    return {int(t): int(c) for t, c in zip(keys, cnts)}
+
+
+def bi2_acero(b: SnbBaseline, tagclass: str,
+              meter: Optional[IOMeter] = None) -> Dict[int, int]:
+    # string label filter over messages
+    strings = b.message.table["<labels>"].read_all(meter)
+    mask = acero.string_label_mask(strings, tagclass)
+    msg_ids = np.flatnonzero(mask)
+    msgs = acero.Relation({"mid": msg_ids.astype(np.int64)})
+    ht = acero.scan(b.has_tag, ["<src>", "<dst>"], meter)
+    j = acero.hash_join(msgs, ht, "mid", "<src>")
+    tags_rel = acero.scan(b.tag.table, ["tagclass"], meter)
+    cls_id = int(tagclass.removeprefix("TagClass"))
+    tag_ids = np.flatnonzero(tags_rel["tagclass"] == cls_id)
+    sel = np.isin(j["<dst>"], tag_ids)
+    keys, counts = acero.aggregate_count(
+        acero.Relation({"t": j["<dst>"][sel]}), "t")
+    return {int(k): int(c) for k, c in zip(keys, counts)}

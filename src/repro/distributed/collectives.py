@@ -1,0 +1,76 @@
+"""Distributed-optimization utilities: gradient compression + overlap.
+
+Cross-pod (DCN) links are ~2x slower than ICI and carry the pure
+data-parallel gradient reduction.  ``compress``/``decompress`` implement
+int8 blockwise quantization with **error feedback** (the quantization
+residual is carried into the next step), the standard trick that keeps
+convergence while cutting cross-pod bytes 4x vs fp32 / 2x vs bf16.
+
+Under jit+GSPMD the all-reduce itself is implicit; the trainer applies
+compression at the pod boundary by quantizing the *accumulated* gradient
+before the optimizer (the DCN reduction then moves int8+scales).  The
+error-feedback state is a pytree sibling of the gradients and checkpoints
+with the optimizer state.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+QBLOCK = 256
+
+
+def _q(x: jnp.ndarray) -> Dict:
+    if x.ndim == 0:
+        x = x[None]
+    pad = (-x.shape[-1]) % QBLOCK
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    blocks = x.reshape(x.shape[:-1] + (-1, QBLOCK))
+    scale = jnp.maximum(jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
+                        / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def _dq(s: Dict, like: jnp.ndarray) -> jnp.ndarray:
+    full = (s["q"].astype(jnp.float32) * s["scale"])
+    full = full.reshape(full.shape[:-2] + (-1,))
+    if like.ndim == 0:
+        return full[0].reshape(())
+    return full[..., : like.shape[-1]].reshape(like.shape)
+
+
+def init_error_feedback(grads) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_with_feedback(grads, error) -> Tuple[Any, Any]:
+    """Returns (compressed pytree, new error feedback state)."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        c = _q(corrected)
+        new_e = corrected - _dq(c, corrected)
+        return c, new_e
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(error)
+    pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return treedef.unflatten([p[0] for p in pairs]), \
+        treedef.unflatten([p[1] for p in pairs])
+
+
+def decompress(compressed, like) -> Any:
+    flat_c = jax.tree_util.tree_leaves(
+        compressed, is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+    flat_l, treedef = jax.tree_util.tree_flatten(like)
+    return treedef.unflatten([_dq(c, l).astype(l.dtype)
+                              for c, l in zip(flat_c, flat_l)])
+
+
+def compressed_bytes(compressed) -> int:
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(compressed):
+        total += leaf.size * leaf.dtype.itemsize
+    return total

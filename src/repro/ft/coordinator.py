@@ -1,0 +1,150 @@
+"""Fault-tolerance coordinator: heartbeats, failure detection, restart.
+
+Models the control plane of a multi-pod training job.  Worker processes
+(simulated in-process here; separate hosts in production) report
+heartbeats per step; the coordinator:
+
+* declares a worker failed after ``heartbeat_timeout`` without progress,
+* on failure, halts the step barrier, selects the restart plan
+  (same-size restart from the latest *committed* checkpoint, or an
+  elastic scale-down onto the surviving mesh via checkpoint/reshard.py),
+* tracks stragglers: workers whose step latency exceeds
+  ``straggler_factor`` x the cluster median get flagged; persistent
+  stragglers trigger (simulated) hot-spare promotion -- the scheduling
+  decision is real, the hardware swap is the cluster's job.
+
+The same class drives the test harness (tests/test_ft.py) and the trainer
+loop's failure hooks -- the trainer calls ``tick`` each step and obeys the
+actions returned.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import time
+from typing import Dict, List, Optional
+
+
+class WorkerState(enum.Enum):
+    HEALTHY = "healthy"
+    STRAGGLING = "straggling"
+    FAILED = "failed"
+    EVICTED = "evicted"
+
+
+class Action(enum.Enum):
+    CONTINUE = "continue"
+    RESTART_FROM_CHECKPOINT = "restart"
+    ELASTIC_SCALE_DOWN = "elastic_scale_down"
+    PROMOTE_SPARE = "promote_spare"
+
+
+@dataclasses.dataclass
+class Worker:
+    worker_id: int
+    state: WorkerState = WorkerState.HEALTHY
+    last_heartbeat: float = 0.0
+    last_step: int = -1
+    step_latencies: List[float] = dataclasses.field(default_factory=list)
+    slow_strikes: int = 0
+
+
+@dataclasses.dataclass
+class Decision:
+    action: Action
+    failed_workers: List[int]
+    stragglers: List[int]
+    restore_step: Optional[int] = None
+    surviving_workers: Optional[List[int]] = None
+
+
+class Coordinator:
+    def __init__(self, num_workers: int, heartbeat_timeout: float = 30.0,
+                 straggler_factor: float = 2.0, strike_limit: int = 3,
+                 spares: int = 1, clock=time.monotonic):
+        self.workers = {i: Worker(i) for i in range(num_workers)}
+        self.heartbeat_timeout = heartbeat_timeout
+        self.straggler_factor = straggler_factor
+        self.strike_limit = strike_limit
+        self.spares = spares
+        self.clock = clock
+        now = clock()
+        for w in self.workers.values():
+            w.last_heartbeat = now
+
+    # ---- worker-side API ----------------------------------------------------
+    def heartbeat(self, worker_id: int, step: int,
+                  step_latency: Optional[float] = None) -> None:
+        w = self.workers[worker_id]
+        if w.state in (WorkerState.FAILED, WorkerState.EVICTED):
+            return
+        w.last_heartbeat = self.clock()
+        w.last_step = max(w.last_step, step)
+        if step_latency is not None:
+            w.step_latencies.append(step_latency)
+            if len(w.step_latencies) > 32:
+                w.step_latencies = w.step_latencies[-32:]
+
+    # ---- control plane ------------------------------------------------------
+    def _median_latency(self) -> Optional[float]:
+        lats = [w.step_latencies[-1] for w in self.workers.values()
+                if w.step_latencies
+                and w.state not in (WorkerState.FAILED, WorkerState.EVICTED)]
+        if not lats:
+            return None
+        lats = sorted(lats)
+        return lats[len(lats) // 2]
+
+    def tick(self, latest_committed_step: Optional[int]) -> Decision:
+        now = self.clock()
+        failed, stragglers = [], []
+        median = self._median_latency()
+        for w in self.workers.values():
+            if w.state in (WorkerState.FAILED, WorkerState.EVICTED):
+                continue
+            if now - w.last_heartbeat > self.heartbeat_timeout:
+                w.state = WorkerState.FAILED
+                failed.append(w.worker_id)
+                continue
+            if median and w.step_latencies and \
+                    w.step_latencies[-1] > self.straggler_factor * median:
+                w.slow_strikes += 1
+                w.state = WorkerState.STRAGGLING
+                stragglers.append(w.worker_id)
+            elif w.state == WorkerState.STRAGGLING:
+                w.state = WorkerState.HEALTHY
+                w.slow_strikes = 0
+
+        # persistent stragglers: promote a spare (hot swap)
+        for wid in list(stragglers):
+            w = self.workers[wid]
+            if w.slow_strikes >= self.strike_limit and self.spares > 0:
+                self.spares -= 1
+                w.state = WorkerState.EVICTED
+                nid = max(self.workers) + 1
+                self.workers[nid] = Worker(nid, last_heartbeat=now)
+                return Decision(Action.PROMOTE_SPARE, failed, stragglers,
+                                restore_step=latest_committed_step)
+
+        if failed:
+            survivors = [w.worker_id for w in self.workers.values()
+                         if w.state == WorkerState.HEALTHY
+                         or w.state == WorkerState.STRAGGLING]
+            if self.spares >= len(failed):
+                self.spares -= len(failed)
+                now = self.clock()
+                for _ in failed:
+                    nid = max(self.workers) + 1
+                    self.workers[nid] = Worker(nid, last_heartbeat=now)
+                return Decision(Action.RESTART_FROM_CHECKPOINT, failed,
+                                stragglers,
+                                restore_step=latest_committed_step)
+            return Decision(Action.ELASTIC_SCALE_DOWN, failed, stragglers,
+                            restore_step=latest_committed_step,
+                            surviving_workers=survivors)
+        return Decision(Action.CONTINUE, [], stragglers)
+
+    def healthy_count(self) -> int:
+        return sum(1 for w in self.workers.values()
+                   if w.state in (WorkerState.HEALTHY,
+                                  WorkerState.STRAGGLING))

@@ -1,0 +1,33 @@
+"""Jit'd wrapper: PAC + property pages -> compacted selected values."""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.pac import PAC
+
+from . import kernel as K
+from . import ref as R
+
+
+def select_from_pages(pac: PAC, page_values: Dict[int, np.ndarray],
+                      use_pallas: bool = True) -> np.ndarray:
+    """Batched selection pushdown over all of a PAC's non-empty pages."""
+    pages = pac.pages()
+    if not pages:
+        return np.zeros(0, np.float32)
+    ps = pac.page_size
+    wpp = ps // 32
+    vals = np.zeros((len(pages), ps), np.float32)
+    words = np.zeros((len(pages), wpp), np.uint32)
+    for i, p in enumerate(pages):
+        pv = np.asarray(page_values[p], np.float32)
+        vals[i, :len(pv)] = pv
+        words[i, :] = pac.bitmaps[p][:wpp]
+    fn = K.bitmap_select_pallas if use_pallas else \
+        (lambda v, w, page_size, **kw: R.bitmap_select_ref(v, w, page_size))
+    out, counts = fn(jnp.asarray(vals), jnp.asarray(words), page_size=ps)
+    out, counts = np.asarray(out), np.asarray(counts)[:, 0]
+    return np.concatenate([out[i, :counts[i]] for i in range(len(pages))])

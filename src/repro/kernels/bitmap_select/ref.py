@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for bitmap_select."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bitmap_select_ref(vals, words, page_size: int):
+    def one(v, w):
+        lanes = jnp.arange(page_size, dtype=jnp.int32)
+        bit = (jnp.take(w, lanes >> 5) >> (lanes & 31).astype(jnp.uint32)) \
+            & jnp.uint32(1)
+        mask = bit.astype(jnp.int32)
+        pos = jnp.cumsum(mask) - 1
+        out = jnp.zeros_like(v)
+        out = out.at[jnp.where(mask == 1, pos, page_size)].set(v, mode="drop")
+        return out, mask.sum()[None]
+
+    outs, counts = jax.vmap(one)(vals, words)
+    return outs, counts

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for flash_attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """Naive softmax attention; q/k/v: [bh, seq, d] (fp32 math)."""
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", qf, kf) / (d ** 0.5)
+    if causal:
+        seq_q, seq_k = s.shape[-2], s.shape[-1]
+        mask = (jnp.arange(seq_q)[:, None] >= jnp.arange(seq_k)[None, :])
+        s = jnp.where(mask[None], s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, vf).astype(q.dtype)

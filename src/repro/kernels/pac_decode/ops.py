@@ -1,0 +1,127 @@
+"""Jit'd wrappers + storage-plane integration for pac_decode kernels."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.encoding import DEFAULT_PAGE_SIZE, MINIBLOCK, DeltaColumn
+from repro.core.pac import PAC
+
+from . import kernel as K
+from . import ref as R
+
+
+def _next_multiple(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def pack_pages(col: DeltaColumn, p0: int, p1: int
+               ) -> Tuple[np.ndarray, ...]:
+    """Stack pages [p0, p1) of a DeltaColumn into fixed-shape batch arrays.
+
+    Pads miniblock metadata to ``page_size // MINIBLOCK`` and packed words
+    to the worst case (bw=32).  This is exactly the VMEM layout the kernel
+    tiles over.
+    """
+    ps = col.page_size
+    n_mini = ps // MINIBLOCK
+    max_words = ps  # worst case: 32-bit deltas -> one word per delta
+    pages = col.pages[p0:p1]
+    n = len(pages)
+    first = np.zeros((n, 1), np.int32)
+    counts = np.zeros((n, 1), np.int32)
+    mind = np.zeros((n, n_mini), np.int32)
+    bw = np.zeros((n, n_mini), np.int32)
+    woff = np.zeros((n, n_mini), np.int32)
+    packed = np.zeros((n, max_words), np.uint32)
+    for i, pg in enumerate(pages):
+        first[i, 0] = pg.first_value
+        counts[i, 0] = pg.count
+        k = len(pg.min_deltas)
+        mind[i, :k] = pg.min_deltas
+        bw[i, :k] = pg.bit_widths
+        woff[i, :k] = pg.word_offsets
+        packed[i, :len(pg.packed)] = pg.packed
+    return first, mind, bw, woff, packed, counts
+
+
+def decode_pages(col: DeltaColumn, p0: int, p1: int,
+                 use_pallas: bool = True) -> np.ndarray:
+    """Decode pages [p0, p1) via the kernel (or jnp ref); returns flat ids."""
+    ps = col.page_size
+    args = pack_pages(col, p0, p1)
+    if use_pallas:
+        ids = K.delta_decode_pallas(*[jnp.asarray(a) for a in args],
+                                    page_size=ps)
+    else:
+        ids = R.decode_pages_ref(*[jnp.asarray(a) for a in args],
+                                 page_size=ps)
+    ids = np.asarray(ids)
+    counts = args[5][:, 0]
+    return np.concatenate([ids[i, :counts[i]] for i in range(len(counts))])
+
+
+def retrieve_pac(col: DeltaColumn, lo: int, hi: int, target_page_size: int,
+                 meter=None, use_pallas: bool = True) -> PAC:
+    """Kernel-engine neighbor retrieval: rows [lo, hi) -> PAC.
+
+    Charges the same page bytes as the numpy path (the I/O plane is
+    identical; only the decode compute engine differs).
+    """
+    if hi <= lo:
+        return PAC(target_page_size)
+    ps = col.page_size
+    p0, p1 = lo // ps, (hi - 1) // ps + 1
+    if meter is not None:
+        meter.record(sum(col.pages[p].nbytes() for p in range(p0, p1)), 1)
+    flat = decode_pages(col, p0, p1, use_pallas)
+    ids = flat[lo - p0 * ps: hi - p0 * ps]
+    return PAC.from_ids(ids, target_page_size)
+
+
+def decode_range_to_bitmap(col: DeltaColumn, lo: int, hi: int,
+                           base: int, n_words: int,
+                           use_pallas: bool = True) -> np.ndarray:
+    """Fused path: delta rows [lo, hi) -> one uint32 bitmap over
+    [base, base + 32 * n_words). ``base`` must be 32-aligned.
+
+    The row mask is applied by decoding whole pages but marking rows
+    outside [lo, hi) invalid via count clamping per page boundary -- for
+    simplicity, rows outside the range are zeroed host-side by id slicing
+    in the non-fused path; the fused path requires page-aligned [lo, hi)
+    (the common case: whole-column label/bitmap scans).
+    """
+    assert base % 32 == 0
+    ps = col.page_size
+    assert lo % ps == 0 and (hi % ps == 0 or hi == col.count), \
+        "fused path requires page-aligned ranges"
+    p0, p1 = lo // ps, -(-hi // ps)
+    args = [jnp.asarray(a) for a in pack_pages(col, p0, p1)]
+    words_out = _next_multiple(n_words, K.WORD_TILE)
+    if use_pallas:
+        bm = K.fused_decode_bitmap(*args, jnp.int32(base), page_size=ps,
+                                   words_out=words_out)
+    else:
+        bm = R.fused_ref(*args, jnp.int32(base), page_size=ps,
+                         words_out=words_out)
+    return np.asarray(bm)[:n_words]
+
+
+def ids_to_bitmap(ids: np.ndarray, base: int, n_words: int,
+                  use_pallas: bool = True) -> np.ndarray:
+    """Standalone bitmap construction from sorted ids (32-aligned base)."""
+    assert base % 32 == 0
+    n = _next_multiple(max(len(ids), 1), K.ID_TILE)
+    padded = np.zeros(n, np.int32)
+    padded[:len(ids)] = ids
+    words_out = _next_multiple(n_words, K.WORD_TILE)
+    if use_pallas:
+        bm = K.bitmap_pallas(jnp.asarray(padded), jnp.int32(len(ids)),
+                             jnp.int32(base), n_words=words_out)
+    else:
+        bm = R.bitmap_ref(jnp.asarray(padded), jnp.int32(len(ids)),
+                          jnp.int32(base), words_out)
+    return np.asarray(bm)[:n_words]

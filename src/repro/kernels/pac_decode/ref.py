@@ -1,0 +1,62 @@
+"""Pure-jnp oracle for the pac_decode kernels (same padded inputs)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.encoding import MINIBLOCK
+
+
+def decode_pages_ref(first, min_deltas, bit_widths, word_offsets, packed,
+                     counts, page_size: int):
+    """jnp reference of delta_decode_pallas (vmapped over pages)."""
+
+    def one(first1, mind, bw_arr, woff, pk, count):
+        n_deltas = page_size - 1
+        idx = jnp.arange(n_deltas, dtype=jnp.int32)
+        mini = idx // MINIBLOCK
+        within = idx % MINIBLOCK
+        bw = jnp.take(bw_arr, mini).astype(jnp.int32)
+        bit_pos = within * bw
+        word_idx = jnp.take(woff, mini) + bit_pos // 32
+        shift = (bit_pos % 32).astype(jnp.uint32)
+        words = jnp.take(pk, word_idx)
+        mask = jnp.where(bw >= 32, jnp.uint32(0xFFFFFFFF),
+                         (jnp.uint32(1) << bw.astype(jnp.uint32)) - 1)
+        resid = ((words >> shift) & mask).astype(jnp.int32)
+        resid = jnp.where(bw == 0, 0, resid)
+        deltas = resid + jnp.take(mind, mini)
+        deltas = jnp.where(idx < count - 1, deltas, 0)
+        return first1 + jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), jnp.cumsum(deltas)])
+
+    return jax.vmap(one)(first[:, 0], min_deltas, bit_widths, word_offsets,
+                         packed, counts[:, 0])
+
+
+def bitmap_ref(ids, count, base, n_words: int):
+    """jnp reference of bitmap_pallas."""
+    ids = ids.astype(jnp.int32)
+    n = ids.shape[0]
+    gidx = jnp.arange(n, dtype=jnp.int32)
+    valid = gidx < count
+    prev = jnp.concatenate([ids[:1] - 1, ids[:-1]])
+    valid = valid & ((ids != prev) | (gidx == 0))
+    rel = ids - base
+    word = rel >> 5
+    bit = jnp.uint32(1) << (rel & 31).astype(jnp.uint32)
+    in_range = (rel >= 0) & (word < n_words) & valid
+    out = jnp.zeros(n_words, jnp.uint32)
+    contrib = jnp.where(in_range, bit, 0)
+    return out.at[jnp.where(in_range, word, 0)].add(
+        contrib, mode="drop").astype(jnp.uint32)
+
+
+def fused_ref(first, min_deltas, bit_widths, word_offsets, packed, counts,
+              base, page_size: int, words_out: int):
+    ids = decode_pages_ref(first, min_deltas, bit_widths, word_offsets,
+                           packed, counts, page_size)
+    acc = jnp.zeros(words_out, jnp.uint32)
+    for p in range(ids.shape[0]):
+        acc |= bitmap_ref(ids[p], counts[p, 0], base, words_out)
+    return acc

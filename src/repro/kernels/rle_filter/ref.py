@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for rle_filter."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rle_to_bitmap_ref(positions, meta, n_words: int):
+    positions = positions[0]
+    first_value, want, count = meta[0, 0], meta[0, 1], meta[0, 2]
+    lanes = jnp.arange(n_words * 32, dtype=jnp.int32)
+    run = jnp.searchsorted(positions, lanes, side="right").astype(jnp.int32) - 1
+    value = (first_value ^ (run & 1)).astype(jnp.int32)
+    bits = (value == want) & (lanes < count)
+    b = bits.reshape(n_words, 32).astype(jnp.uint32)
+    pows = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return (b * pows[None, :]).sum(axis=1, dtype=jnp.uint32)

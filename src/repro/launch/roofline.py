@@ -1,0 +1,241 @@
+"""Roofline analysis from compiled dry-run artifacts (TPU v5e targets).
+
+Three terms, each in seconds for one step:
+
+  compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+  memory     = HLO_bytes_per_device / HBM_BW
+  collective = ici_bytes_per_device / ICI_BW + dcn_bytes_per_device / DCN_BW
+
+Measured calibration on this backend (see EXPERIMENTS.md §Methodology):
+``cost_analysis()`` and the optimized HLO text are both computed on the
+SPMD-partitioned *per-device* module (verified: an unsharded compile of
+the same probe reports ~chips x more flops).  Per-device flops above the
+ideal ``global/chips`` therefore measure *involuntary replication* by the
+partitioner -- a real inefficiency the perf loop attacks.  Collective
+bytes are NOT in cost_analysis: we parse ``compiled.as_text()`` and sum
+the result-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, attributing each to ICI or DCN by whether
+its replica groups cross a pod boundary (device id // 256).
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) cross-checks how much of
+the compiled compute is useful (remat / redundancy show up as ratio < 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+# -------------------- hardware constants (TPU v5e) -------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (per-chip effective)
+DCN_BW = 25e9                # bytes/s per chip across pods (assumed)
+CHIPS_PER_POD = 256
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\s")
+_GROUPS_ALT_RE = re.compile(r"replica_groups=\[\d+,\d+\]<=\[(\d+)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO result type (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _crosses_pod(line: str, chips_per_pod: int) -> bool:
+    """True if any replica group spans a pod boundary."""
+    m = _GROUPS_RE.search(line)
+    if m:
+        for grp in m.group(1).split("},{"):
+            ids = [int(x) for x in re.findall(r"\d+", grp)]
+            if ids and (min(ids) // chips_per_pod
+                        != max(ids) // chips_per_pod):
+                return True
+        return False
+    # iota group syntax: replica_groups=[G,N]<=[T] -- contiguous stride-1
+    # groups of size N: crosses pods iff N > chips_per_pod (conservative)
+    m = _GROUPS_ALT_RE.search(line)
+    if m:
+        return False
+    return False
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    ici_bytes: int = 0
+    dcn_bytes: int = 0
+    by_op: Dict[str, int] = dataclasses.field(default_factory=dict)
+    count: int = 0
+
+    @property
+    def total_bytes(self) -> int:
+        return self.ici_bytes + self.dcn_bytes
+
+
+def parse_collectives(hlo_text: str,
+                      chips_per_pod: int = CHIPS_PER_POD) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # match '<name> = <type> <op>(' with op a collective
+        op_found = None
+        for op in _COLLECTIVES:
+            if f"= " in ls and (f" {op}(" in ls or f"{op}-start(" in ls):
+                op_found = op
+                break
+        if not op_found:
+            continue
+        # result type = text between '=' and the op name
+        try:
+            rhs = ls.split("= ", 1)[1]
+        except IndexError:
+            continue
+        type_str = rhs.split(op_found)[0]
+        nbytes = _shape_bytes(type_str)
+        if nbytes == 0:
+            continue
+        stats.count += 1
+        stats.by_op[op_found] = stats.by_op.get(op_found, 0) + nbytes
+        if _crosses_pod(ls, chips_per_pod):
+            stats.dcn_bytes += nbytes
+        else:
+            stats.ici_bytes += nbytes
+    return stats
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll: CollectiveStats
+    model_flops: float            # 6*N_active*D (global, per step)
+    per_device_memory: Optional[Dict[str, float]] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return (self.coll.ici_bytes / ICI_BW
+                + self.coll.dcn_bytes / DCN_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        hlo_global = self.flops_per_device * self.chips
+        return self.model_flops / hlo_global if hlo_global else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of peak the step would achieve if the dominant term were
+        the wall clock: useful_FLOPs / (chips * peak * t_dominant)."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS * t)
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "hlo_flops_per_dev": self.flops_per_device,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "coll_ici_bytes": self.coll.ici_bytes,
+            "coll_dcn_bytes": self.coll.dcn_bytes,
+            "coll_count": self.coll.count,
+            "memory": self.per_device_memory,
+        }
+
+
+# ------------------------- model FLOPs (6*N*D) ------------------------------
+
+def active_params(cfg) -> float:
+    """Active (per-token) parameter count: MoE counts top_k + shared only.
+
+    The head is always materialized (decoupled-tied, DESIGN.md §6), so
+    embedding params count twice regardless of ``tie_embeddings``.
+    """
+    d = cfg.d_model
+    total = cfg.vocab_size * d * 2
+    specs = list(cfg.prefix) + list(cfg.unit) * cfg.n_units
+    for i, spec in enumerate(specs):
+        if spec.kind == "attn":
+            total += d * cfg.head_dim * (cfg.num_heads * 2
+                                         + cfg.num_kv_heads * 2)
+        else:
+            s = cfg.ssm
+            din = s.num_heads * s.head_dim
+            total += d * (2 * din + 2 * s.n_groups * s.state_dim
+                          + s.num_heads) + din * d
+        if spec.cross:
+            total += d * cfg.head_dim * (cfg.num_heads * 2
+                                         + cfg.num_kv_heads * 2)
+        if spec.mlp:
+            if spec.moe:
+                m = cfg.moe
+                total += m.top_k * 3 * d * m.d_expert
+                if m.num_shared:
+                    total += 3 * d * (m.d_shared or m.d_expert)
+            else:
+                ff = (cfg.prefix_d_ff if (i < len(cfg.prefix)
+                                          and cfg.prefix_d_ff) else cfg.d_ff)
+                total += (3 if cfg.gated_mlp else 2) * d * ff
+    if cfg.encoder_layers:
+        total += cfg.encoder_layers * (
+            d * cfg.head_dim * (cfg.num_heads * 2 + cfg.num_kv_heads * 2)
+            + (3 if cfg.gated_mlp else 2) * d * cfg.d_ff)
+    return float(total)
+
+
+def model_flops(cfg, kind: str, batch: int, seq: int) -> float:
+    """6*N_active*D for training; 2*N_active*D for inference steps."""
+    n = active_params(cfg)
+    if kind == "train":
+        tokens = batch * seq
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = batch * seq
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * batch

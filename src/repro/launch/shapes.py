@@ -1,0 +1,80 @@
+"""Assigned input-shape set + ShapeDtypeStruct stand-ins (no allocation).
+
+LM transformer shapes (per the assignment):
+  train_4k     seq=4,096   global_batch=256   -> train_step
+  prefill_32k  seq=32,768  global_batch=32    -> prefill_step
+  decode_32k   seq=32,768  global_batch=128   -> serve (decode) step
+  long_500k    seq=524,288 global_batch=1     -> serve step, SSM/hybrid/
+                                                 local-attn archs only
+
+``input_specs`` builds the exact argument pytrees each step lowers with:
+weak-type-correct ShapeDtypeStructs for tokens/labels, modality-stub frame
+or patch embeddings for [audio]/[vlm] archs, and KV/SSM caches sized to the
+cell's context length.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeDef:
+    name: str
+    kind: str           # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeDef] = {
+    "train_4k": ShapeDef("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeDef("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeDef("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeDef("long_500k", "decode", 524_288, 1),
+}
+
+
+def supported_shapes(cfg: ModelConfig) -> List[str]:
+    """long_500k only for sub-quadratic archs (DESIGN.md §Arch-applicability)."""
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.supports_long:
+        out.append("long_500k")
+    return out
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeDef,
+                with_labels: bool) -> Dict:
+    b, s = shape.batch, shape.seq
+    if shape.kind == "decode":
+        batch = {"tokens": _sds((b, 1), jnp.int32)}
+        return batch
+    batch = {"tokens": _sds((b, s), jnp.int32)}
+    if with_labels:
+        batch["labels"] = _sds((b, s), jnp.int32)
+    dt = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    if cfg.encoder_layers:
+        batch["frames"] = _sds((b, s, cfg.d_model), dt)
+    if cfg.num_vision_tokens:
+        batch["vision"] = _sds((b, cfg.num_vision_tokens, cfg.d_model), dt)
+    return batch
+
+
+def cache_specs(model, cfg: ModelConfig, shape: ShapeDef) -> Dict:
+    """ShapeDtypeStruct cache for prefill/decode cells (no allocation)."""
+    ctx_len = 0
+    if cfg.encoder_layers:
+        ctx_len = shape.seq
+    elif cfg.num_vision_tokens:
+        ctx_len = cfg.num_vision_tokens
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.batch, max_len=shape.seq,
+                                 ctx_len=ctx_len, dtype=jnp.bfloat16))

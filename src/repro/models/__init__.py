@@ -1,0 +1,2 @@
+"""Pure-JAX model zoo (decoder-only / enc-dec / VLM / SSM / MoE / hybrid)."""
+from .model import LM, build_model, param_count

@@ -1,0 +1,181 @@
+"""Attention: GQA / sliding-window / cross, with KV-cache decode paths.
+
+The einsum formulation keeps GSPMD free to shard heads over the ``model``
+axis and sequence/batch over ``data``; the optional Pallas flash-attention
+path (repro.kernels.flash_attention) is a config flag used by benchmarks.
+
+Sliding windows are expressed with a *traced* window size so layers with
+different windows (gemma3's 5:1 local:global) stay homogeneous under
+scan-over-layers.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, linear_init, rmsnorm, rmsnorm_init
+
+NEG_INF = -1e30
+
+
+def attention_init(rng, d_model: int, num_heads: int, num_kv_heads: int,
+                   head_dim: int, qk_norm: bool = False,
+                   dtype=jnp.float32) -> Dict:
+    rq, rk, rv, ro = jax.random.split(rng, 4)
+    p = {
+        "q": linear_init(rq, d_model, num_heads * head_dim, dtype),
+        "k": linear_init(rk, d_model, num_kv_heads * head_dim, dtype),
+        "v": linear_init(rv, d_model, num_kv_heads * head_dim, dtype),
+        "o": linear_init(ro, num_heads * head_dim, d_model, dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = rmsnorm_init(head_dim, dtype)
+        p["k_norm"] = rmsnorm_init(head_dim, dtype)
+    return p
+
+
+def _split_heads(x: jnp.ndarray, n: int, dh: int) -> jnp.ndarray:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, dh)
+
+
+def _sdpa(q, k, v, q_pos, k_pos, window, causal: bool):
+    """q: [B,S,H,dh]; k/v: [B,T,KV,dh]; positions int32 [B,S]/[B,T].
+
+    ``window`` is a traced int32 scalar: key t attends iff
+    ``0 <= q_pos - k_pos < window`` (causal) -- window >= seq means full.
+
+    Sharding is chosen *adaptively against the ambient mesh*
+    (EXPERIMENTS.md §Perf iters 4+6):
+      * prefill/train, heads divide the model axis (96/64/32/16 heads on
+        the 16-way mesh): classic head-parallel -- free, no resharding;
+      * prefill/train, heads do NOT divide (8/12/15): sequence-parallel --
+        queries shard S over 'model', K/V gathered (small), scores stay
+        S-sharded.  (Blanket head_dim sharding here would make GSPMD
+        all-reduce the full [B,H,S,T] score matrix: measured 128 GB on
+        the 32k prefill.  Blanket sequence-parallel costs divisible-head
+        archs 5x collective bytes: measured on the 123B config.)
+      * decode (S == 1): flash-decode -- the KV length shards over
+        'model', softmax/combine reduce over the sharded T with small
+        psums.
+    """
+    from repro.distributed.sharding import _context_mesh, constrain
+    b, s, h, dh = q.shape
+    kv = k.shape[2]
+    if kv != h:
+        k = jnp.repeat(k, h // kv, axis=2)
+        v = jnp.repeat(v, h // kv, axis=2)
+    mesh = _context_mesh()
+    heads_parallel = (mesh is not None and "model" in mesh.axis_names
+                      and h % mesh.shape["model"] == 0)
+    if s > 1:
+        if heads_parallel:
+            q = constrain(q, "dp", None, "model", None)
+            k = constrain(k, "dp", None, "model", None)
+            v = constrain(v, "dp", None, "model", None)
+        else:
+            q = constrain(q, "dp", "model", None, None)
+            k = constrain(k, "dp", None, None, None)
+            v = constrain(v, "dp", None, None, None)
+    else:
+        k = constrain(k, "dp", "model", None, None)
+        v = constrain(v, "dp", "model", None, None)
+    scale = 1.0 / (dh ** 0.5)
+    logits = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if s > 1:
+        logits = (constrain(logits, "dp", "model", None, None)
+                  if heads_parallel
+                  else constrain(logits, "dp", None, "model", None))
+    else:
+        logits = constrain(logits, "dp", None, None, "model")
+    if causal:
+        diff = q_pos[:, None, :, None] - k_pos[:, None, None, :]
+        mask = (diff >= 0) & (diff < window)
+        logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs.astype(v.dtype), v)
+    return out.reshape(b, s, h * dh)
+
+
+def attention_apply(params: Dict, x: jnp.ndarray, *,
+                    num_heads: int, num_kv_heads: int, head_dim: int,
+                    positions: jnp.ndarray,
+                    window: jnp.ndarray,
+                    rope_theta: float = 10_000.0,
+                    causal: bool = True,
+                    use_rope: bool = True,
+                    kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray,
+                                                jnp.ndarray]] = None,
+                    cache: Optional[Dict] = None,
+                    use_flash: bool = False) -> Tuple[jnp.ndarray,
+                                                      Optional[Dict]]:
+    """Self/cross attention with optional KV cache.
+
+    * training / prefill: ``cache=None`` -> returns (out, None) or
+      (out, fresh_cache) when ``cache`` is a dict with ``max_len``.
+    * decode: ``cache={'k','v','index'}`` -> appends current kv, attends
+      over the cache prefix, returns (out, updated_cache).
+    * cross attention: ``kv_override=(k, v, k_pos)`` (already headed).
+    """
+    q = _split_heads(x @ params["q"], num_heads, head_dim)
+    if kv_override is None:
+        k = _split_heads(x @ params["k"], num_kv_heads, head_dim)
+        v = _split_heads(x @ params["v"], num_kv_heads, head_dim)
+        k_pos = positions
+    else:
+        k, v, k_pos = kv_override
+    if "q_norm" in params:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k) if kv_override is None else k
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        if kv_override is None:
+            k = apply_rope(k, k_pos, rope_theta)
+
+    new_cache = None
+    if cache is not None and kv_override is None:
+        idx = cache["index"]          # int32 scalar OR per-slot vector [B]
+        s = x.shape[1]
+        if idx.ndim == 0:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+        else:
+            # per-slot write positions (continuous-batching engine)
+            b = x.shape[0]
+            rows = jnp.arange(b, dtype=jnp.int32)[:, None]
+            cols = idx[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+            ck = cache["k"].at[rows, cols].set(k.astype(cache["k"].dtype),
+                                               mode="drop")
+            cv = cache["v"].at[rows, cols].set(v.astype(cache["v"].dtype),
+                                               mode="drop")
+        new_cache = {"k": ck, "v": cv, "index": idx + s}
+        k, v = ck, cv
+        t = ck.shape[1]
+        k_pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32),
+                                 (x.shape[0], t))
+        # entries beyond `index + s` are masked by causality w.r.t. q_pos
+
+    if use_flash and cache is None and kv_override is None:
+        from repro.kernels.flash_attention import ops as fa
+        out = fa.mha(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                     v.transpose(0, 2, 1, 3), causal=causal)
+        out = out.transpose(0, 2, 1, 3).reshape(x.shape[0], x.shape[1], -1)
+    else:
+        out = _sdpa(q, k, v, positions, k_pos, window, causal)
+    return out @ params["o"], new_cache
+
+
+def init_kv_cache(batch: int, max_len: int, num_kv_heads: int,
+                  head_dim: int, dtype=jnp.bfloat16,
+                  vector_index: bool = False) -> Dict:
+    return {
+        "k": jnp.zeros((batch, max_len, num_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, num_kv_heads, head_dim), dtype),
+        "index": (jnp.zeros((batch,), jnp.int32) if vector_index
+                  else jnp.zeros((), jnp.int32)),
+    }

@@ -1,0 +1,151 @@
+"""Unified decoder block: pre-norm residual layers driven by LayerSpec.
+
+One ``layer_init`` / ``layer_apply`` pair covers every assigned family:
+attention (full / windowed / GQA), optional cross-attention sub-layer (VLM,
+enc-dec decoders), Mamba-2 SSD mixers, and dense-MLP or MoE FFNs.  Layers of
+the same spec are parameter-homogeneous, so a repeating unit stacks along a
+scan axis (models/model.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FULL_WINDOW, LayerSpec, ModelConfig
+from .attention import attention_apply, attention_init, init_kv_cache
+from .layers import apply_norm, linear_init, mlp, mlp_init, norm_init
+from .moe import moe_apply, moe_init
+from .ssm import init_ssm_cache, ssm_apply, ssm_init
+
+BIG_WINDOW = 1 << 30  # "full attention" as a window size
+
+
+def layer_init(rng, cfg: ModelConfig, spec: LayerSpec,
+               d_ff_override: int = 0, dtype=jnp.float32) -> Dict:
+    keys = jax.random.split(rng, 8)
+    p: Dict = {"ln1": norm_init(cfg.norm, cfg.d_model, dtype)}
+    if spec.kind == "attn":
+        p["attn"] = attention_init(keys[0], cfg.d_model, cfg.num_heads,
+                                   cfg.num_kv_heads, cfg.head_dim,
+                                   cfg.qk_norm, dtype)
+    else:
+        s = cfg.ssm
+        p["ssm"] = ssm_init(keys[0], cfg.d_model, s.num_heads, s.head_dim,
+                            s.state_dim, s.n_groups, s.conv_width, dtype)
+    if spec.cross:
+        p["ln_x"] = norm_init(cfg.norm, cfg.d_model, dtype)
+        p["xattn"] = attention_init(keys[1], cfg.d_model, cfg.num_heads,
+                                    cfg.num_kv_heads, cfg.head_dim,
+                                    False, dtype)
+        p["x_gate"] = jnp.zeros((1,), dtype)  # tanh-gated injection (llama-v)
+    if spec.mlp:
+        p["ln2"] = norm_init(cfg.norm, cfg.d_model, dtype)
+        if spec.moe:
+            m = cfg.moe
+            p["moe"] = moe_init(keys[2], cfg.d_model, m.d_expert,
+                                m.num_experts, m.num_shared, m.d_shared,
+                                dtype)
+        else:
+            p["mlp"] = mlp_init(keys[2], cfg.d_model,
+                                d_ff_override or cfg.d_ff,
+                                cfg.gated_mlp, cfg.act, dtype)
+    return p
+
+
+def layer_cache_init(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                     max_len: int, dtype=jnp.bfloat16,
+                     vector_index: bool = False) -> Dict:
+    c: Dict = {}
+    if spec.kind == "attn":
+        c["kv"] = init_kv_cache(batch, max_len, cfg.num_kv_heads,
+                                cfg.head_dim, dtype, vector_index)
+    else:
+        s = cfg.ssm
+        c["ssm"] = init_ssm_cache(batch, s.num_heads, s.head_dim,
+                                  s.state_dim, s.n_groups, s.conv_width,
+                                  dtype)
+    if spec.cross:
+        # cross K/V are computed once from the context at prefill
+        c["cross"] = {
+            "k": jnp.zeros((batch, 0, cfg.num_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, 0, cfg.num_kv_heads, cfg.head_dim), dtype),
+        }
+    return c
+
+
+def _cross_kv(params: Dict, ctx: jnp.ndarray, cfg: ModelConfig):
+    from .attention import _split_heads
+    k = _split_heads(ctx @ params["xattn"]["k"], cfg.num_kv_heads,
+                     cfg.head_dim)
+    v = _split_heads(ctx @ params["xattn"]["v"], cfg.num_kv_heads,
+                     cfg.head_dim)
+    return k, v
+
+
+def layer_apply(cfg: ModelConfig, spec: LayerSpec, params: Dict,
+                x: jnp.ndarray, *, positions: jnp.ndarray,
+                window: jnp.ndarray,
+                causal: bool = True,
+                cross_ctx: Optional[jnp.ndarray] = None,
+                cache: Optional[Dict] = None
+                ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Dict = {} if cache is not None else None
+    h = apply_norm(cfg.norm, params["ln1"], x)
+    if spec.kind == "attn":
+        win = jnp.where(window == FULL_WINDOW, BIG_WINDOW, window)
+        out, kvc = attention_apply(
+            params["attn"], h, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim,
+            positions=positions, window=win, rope_theta=cfg.rope_theta,
+            causal=causal, use_rope=cfg.use_rope,
+            cache=cache.get("kv") if cache else None,
+            use_flash=cfg.use_flash)
+        if cache is not None:
+            new_cache["kv"] = kvc
+    else:
+        s = cfg.ssm
+        out, sc = ssm_apply(params["ssm"], h, num_heads=s.num_heads,
+                            head_dim=s.head_dim, state_dim=s.state_dim,
+                            n_groups=s.n_groups, chunk_len=s.chunk_len,
+                            cache=cache.get("ssm") if cache else None)
+        if cache is not None:
+            new_cache["ssm"] = sc
+    x = x + out
+
+    if spec.cross:
+        hx = apply_norm(cfg.norm, params["ln_x"], x)
+        if cache is not None and cross_ctx is None:
+            kx, vx = cache["cross"]["k"], cache["cross"]["v"]
+        else:
+            kx, vx = _cross_kv(params, cross_ctx, cfg)
+            if cache is not None:
+                new_cache["cross"] = {"k": kx, "v": vx}
+        t = kx.shape[1]
+        k_pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32),
+                                 (x.shape[0], t))
+        out, _ = attention_apply(
+            params["xattn"], hx, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim,
+            positions=positions, window=jnp.int32(BIG_WINDOW),
+            causal=False, use_rope=False,
+            kv_override=(kx, vx, k_pos))
+        x = x + jnp.tanh(params["x_gate"]).astype(x.dtype) * out
+        if cache is not None and "cross" not in new_cache:
+            new_cache["cross"] = {"k": kx, "v": vx}
+
+    if spec.mlp:
+        h2 = apply_norm(cfg.norm, params["ln2"], x)
+        if spec.moe:
+            m = cfg.moe
+            out2, a = moe_apply(params["moe"], h2, num_experts=m.num_experts,
+                                top_k=m.top_k,
+                                capacity_factor=m.capacity_factor)
+            aux = aux + a
+        else:
+            out2 = mlp(params["mlp"], h2, cfg.act)
+        x = x + out2
+    return x, new_cache, aux

@@ -1,0 +1,138 @@
+"""Primitive layers: norms, projections, rotary embeddings, MLPs.
+
+Pure-functional: every layer is ``init(rng, ...) -> params`` plus an
+``apply(params, x, ...)`` free function operating on jnp arrays.  Parameter
+trees are plain nested dicts so they stack cleanly along a scan axis and
+shard with simple path-based rules (repro.distributed.sharding).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_init(rng, d_in: int, d_out: int, dtype=jnp.float32,
+                scale: Optional[float] = None) -> jnp.ndarray:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(rng, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(rng, vocab: int, d: int, dtype=jnp.float32) -> jnp.ndarray:
+    return (jax.random.normal(rng, (vocab, d), jnp.float32) * 0.02
+            ).astype(dtype)
+
+
+# ------------------------------- norms -----------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * params["scale"].astype(jnp.float32) \
+        + params["bias"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+def norm_init(kind: str, d: int, dtype=jnp.float32) -> dict:
+    return rmsnorm_init(d, dtype) if kind == "rms" else layernorm_init(d, dtype)
+
+
+def apply_norm(kind: str, params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return rmsnorm(params, x) if kind == "rms" else layernorm(params, x)
+
+
+# ------------------------------- rotary -----------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10_000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10_000.0) -> jnp.ndarray:
+    """x: [B, S, H, dh]; positions: [B, S] (int32)."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)                     # [dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B,S,dh/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------- MLP ------------------------------------
+
+def mlp_init(rng, d_model: int, d_ff: int, gated: bool = True,
+             act: str = "silu", dtype=jnp.float32) -> dict:
+    r1, r2, r3 = jax.random.split(rng, 3)
+    p = {"up": linear_init(r1, d_model, d_ff, dtype),
+         "down": linear_init(r2, d_ff, d_model, dtype)}
+    if gated:
+        p["gate"] = linear_init(r3, d_model, d_ff, dtype)
+    return p
+
+
+def _act(x: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act == "silu":
+        return jax.nn.silu(x)
+    if act == "gelu":
+        return jax.nn.gelu(x)
+    if act == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(act)
+
+
+def mlp(params: dict, x: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    up = x @ params["up"]
+    if "gate" in params:
+        up = _act(x @ params["gate"], act) * up
+    else:
+        up = _act(up, act)
+    return up @ params["down"]
+
+
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                          mask: Optional[jnp.ndarray] = None
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Token-mean CE; logits [.., V] fp32 math.  Returns (loss, n_tokens).
+
+    The gold logit is extracted with a one-hot masked reduction rather
+    than ``take_along_axis``: a gather over the vocab dim forces GSPMD to
+    replicate vocab-sharded logits, while iota-compare + reduce stays
+    vocab-parallel (a psum of per-shard partial sums).
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    onehot = vocab_iota == labels[..., None]
+    gold = jnp.where(onehot, logits, 0.0).sum(axis=-1)
+    nll = logz - gold
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    total = jnp.maximum(mask.sum(), 1.0)
+    return (nll * mask).sum() / total, total

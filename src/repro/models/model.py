@@ -1,0 +1,292 @@
+"""Model assembly: decoder-only / encoder-decoder / VLM language models.
+
+The layer program from :class:`repro.configs.base.ModelConfig` is executed
+as: unrolled ``prefix`` layers, then ``jax.lax.scan`` over ``n_units``
+repeating units (parameters and KV/SSM caches stacked on the scan axis,
+optionally wrapped in ``jax.checkpoint`` for remat).  Scan keeps HLO size
+and compile time O(unit) instead of O(layers) -- essential for the 88-layer
+123B and 72-layer 398B dry-runs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LayerSpec, ModelConfig
+from .blocks import layer_apply, layer_cache_init, layer_init
+from .layers import apply_norm, embed_init, norm_init, softmax_cross_entropy
+
+Params = Dict
+Cache = Dict
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+class LM:
+    """Functional model wrapper: config -> init / apply / prefill / decode."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ init
+    def init(self, seed: int = 0) -> Params:
+        cfg = self.cfg
+        dt = _dtype(cfg.param_dtype)
+        root = jax.random.PRNGKey(seed)
+        n_groups = 6 + len(cfg.prefix)
+        keys = jax.random.split(root, n_groups)
+        params: Params = {
+            "embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model, dt),
+            "final_norm": norm_init(cfg.norm, cfg.d_model, dt),
+        }
+        # The output head is always materialized as its own parameter --
+        # "tied" configs initialize it from the embedding.  Decoupling is a
+        # deliberate TP/sharding decision (DESIGN.md §6): the lookup wants
+        # d_model sharded (gather stays collective-free) while the head
+        # wants vocab sharded (logits come out vocab-parallel); one array
+        # cannot satisfy both without involuntary replication.
+        params["lm_head"] = (params["embed"].T if cfg.tie_embeddings
+                             else embed_init(keys[1], cfg.vocab_size,
+                                             cfg.d_model, dt).T)
+        for i, spec in enumerate(cfg.prefix):
+            params[f"prefix_{i}"] = layer_init(
+                keys[6 + i], cfg, spec, d_ff_override=cfg.prefix_d_ff,
+                dtype=dt)
+        if cfg.n_units:
+            unit_keys = jax.random.split(keys[2], cfg.n_units)
+
+            def one_unit(k):
+                lk = jax.random.split(k, cfg.unit_size)
+                return {f"l{j}": layer_init(lk[j], cfg, spec, dtype=dt)
+                        for j, spec in enumerate(cfg.unit)}
+
+            params["units"] = jax.vmap(one_unit)(unit_keys)
+        if cfg.encoder_layers:
+            enc_keys = jax.random.split(keys[3], cfg.encoder_layers)
+            enc_spec = LayerSpec(kind="attn")
+
+            def one_enc(k):
+                return {"l0": layer_init(k, cfg, enc_spec, dtype=dt)}
+
+            params["enc_units"] = jax.vmap(one_enc)(enc_keys)
+            params["enc_norm"] = norm_init(cfg.norm, cfg.d_model, dt)
+        return params
+
+    # -------------------------------------------------------------- decoder
+    def _windows(self) -> jnp.ndarray:
+        cfg = self.cfg
+        return jnp.asarray(cfg.windows(), jnp.int32).reshape(
+            cfg.n_units, cfg.unit_size)
+
+    def _decoder(self, params: Params, x: jnp.ndarray,
+                 positions: jnp.ndarray,
+                 cross_ctx: Optional[jnp.ndarray],
+                 caches: Optional[Cache],
+                 causal: bool = True) -> Tuple[jnp.ndarray, Optional[Cache],
+                                               jnp.ndarray]:
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        new_caches: Optional[Cache] = {} if caches is not None else None
+        big = jnp.int32(0)
+        for i, spec in enumerate(cfg.prefix):
+            c = caches.get(f"prefix_{i}") if caches is not None else None
+            x, nc, a = layer_apply(cfg, spec, params[f"prefix_{i}"], x,
+                                   positions=positions, window=big,
+                                   causal=causal, cross_ctx=cross_ctx,
+                                   cache=c)
+            aux = aux + a
+            if caches is not None:
+                new_caches[f"prefix_{i}"] = nc
+        if cfg.n_units:
+            windows = self._windows()
+            has_cache = caches is not None
+
+            def body(carry, xs):
+                xc, auxc = carry
+                if has_cache:
+                    unit_params, win_u, cache_u = xs
+                else:
+                    unit_params, win_u = xs
+                out_cache = {}
+                for j, spec in enumerate(cfg.unit):
+                    cj = cache_u[f"l{j}"] if has_cache else None
+                    xc, c, a = layer_apply(cfg, spec, unit_params[f"l{j}"],
+                                           xc, positions=positions,
+                                           window=win_u[j], causal=causal,
+                                           cross_ctx=cross_ctx, cache=cj)
+                    auxc = auxc + a
+                    if has_cache:
+                        out_cache[f"l{j}"] = c
+                return (xc, auxc), (out_cache if has_cache else None)
+
+            if cfg.remat != "none" and not has_cache:
+                policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                          if cfg.remat == "dots" else None)
+                body = jax.checkpoint(body, policy=policy,
+                                      prevent_cse=False)
+            xs = ((params["units"], windows, caches["units"]) if has_cache
+                  else (params["units"], windows))
+            if cfg.unroll_units:
+                carry = (x, aux)
+                cache_outs = []
+                for u in range(cfg.n_units):
+                    xs_u = jax.tree.map(lambda a: a[u], xs)
+                    carry, yc = body(carry, xs_u)
+                    if has_cache:
+                        cache_outs.append(yc)
+                x, aux = carry
+                unit_caches = (jax.tree.map(
+                    lambda *a: jnp.stack(a), *cache_outs)
+                    if has_cache else None)
+            else:
+                (x, aux), unit_caches = jax.lax.scan(body, (x, aux), xs)
+            if has_cache:
+                new_caches["units"] = unit_caches
+        return x, new_caches, aux
+
+    # -------------------------------------------------------------- encoder
+    def _encoder(self, params: Params, frames: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        b, t, _ = frames.shape
+        pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+        enc_spec = LayerSpec(kind="attn")
+
+        def body(xc, unit_params):
+            xc, _, _ = layer_apply(cfg, enc_spec, unit_params["l0"], xc,
+                                   positions=pos, window=jnp.int32(0),
+                                   causal=False, cache=None)
+            return xc, None
+
+        if cfg.unroll_units:
+            x = frames
+            for u in range(cfg.encoder_layers):
+                x, _ = body(x, jax.tree.map(lambda a: a[u],
+                                            params["enc_units"]))
+        else:
+            x, _ = jax.lax.scan(body, frames, params["enc_units"])
+        return apply_norm(cfg.norm, params["enc_norm"], x)
+
+    # ------------------------------------------------------------ embeddings
+    def _embed(self, params: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+        from repro.distributed.sharding import constrain
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = x.astype(_dtype(cfg.compute_dtype))
+        if cfg.scale_embeddings:
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+        return constrain(x, "dp", None, None)
+
+    def _head(self, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+        from repro.distributed.sharding import constrain
+        logits = x @ params["lm_head"].astype(x.dtype)
+        return constrain(logits, "dp", None, "model")
+
+    def _cross_context(self, params: Params,
+                       batch: Dict) -> Optional[jnp.ndarray]:
+        cfg = self.cfg
+        if cfg.encoder_layers:
+            frames = batch["frames"].astype(_dtype(cfg.compute_dtype))
+            return self._encoder(params, frames)
+        if cfg.num_vision_tokens:
+            return batch["vision"].astype(_dtype(cfg.compute_dtype))
+        return None
+
+    # ----------------------------------------------------------------- apply
+    def apply(self, params: Params, batch: Dict) -> Tuple[jnp.ndarray,
+                                                          jnp.ndarray]:
+        """Full forward (training): returns (logits, aux_loss)."""
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32),
+                                         (b, s))
+        x = self._embed(params, tokens)
+        ctx = self._cross_context(params, batch)
+        x, _, aux = self._decoder(params, x, positions, ctx, None)
+        x = apply_norm(self.cfg.norm, params["final_norm"], x)
+        return self._head(params, x), aux
+
+    def loss(self, params: Params, batch: Dict
+             ) -> Tuple[jnp.ndarray, Dict]:
+        logits, aux = self.apply(params, batch)
+        ce, ntok = softmax_cross_entropy(logits, batch["labels"],
+                                         batch.get("mask"))
+        total = ce + 0.01 * aux
+        return total, {"ce": ce, "aux": aux, "tokens": ntok}
+
+    # ----------------------------------------------------------------- cache
+    def init_cache(self, batch_size: int, max_len: int,
+                   ctx_len: int = 0, dtype=jnp.bfloat16,
+                   vector_index: bool = False) -> Cache:
+        """``vector_index=True`` gives per-slot positions (continuous
+        batching); the default scalar index keeps all slots aligned."""
+        cfg = self.cfg
+        caches: Cache = {"index": (jnp.zeros((batch_size,), jnp.int32)
+                                   if vector_index
+                                   else jnp.zeros((), jnp.int32))}
+
+        def one(spec: LayerSpec) -> Dict:
+            c = layer_cache_init(cfg, spec, batch_size, max_len, dtype,
+                                 vector_index)
+            if spec.cross:
+                c["cross"] = {
+                    "k": jnp.zeros((batch_size, ctx_len, cfg.num_kv_heads,
+                                    cfg.head_dim), dtype),
+                    "v": jnp.zeros((batch_size, ctx_len, cfg.num_kv_heads,
+                                    cfg.head_dim), dtype),
+                }
+            return c
+
+        for i, spec in enumerate(cfg.prefix):
+            caches[f"prefix_{i}"] = one(spec)
+        if cfg.n_units:
+            unit_cache = {f"l{j}": one(spec)
+                          for j, spec in enumerate(cfg.unit)}
+            caches["units"] = jax.tree.map(
+                lambda a: jnp.zeros((cfg.n_units,) + a.shape, a.dtype),
+                unit_cache)
+        return caches
+
+    def prefill(self, params: Params, batch: Dict, cache: Cache
+                ) -> Tuple[jnp.ndarray, Cache]:
+        """Run the prompt through the model, filling the cache.
+
+        Returns (logits_last, cache)."""
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x = self._embed(params, tokens)
+        ctx = self._cross_context(params, batch)
+        x, new_cache, _ = self._decoder(params, x, positions, ctx, cache)
+        new_cache["index"] = cache["index"] + s
+        x = apply_norm(self.cfg.norm, params["final_norm"], x)
+        return self._head(params, x[:, -1:]), new_cache
+
+    def decode_step(self, params: Params, tokens: jnp.ndarray, cache: Cache
+                    ) -> Tuple[jnp.ndarray, Cache]:
+        """One decode step.  tokens: [B, 1]."""
+        b = tokens.shape[0]
+        idx = cache["index"]
+        positions = (idx[:, None] if idx.ndim == 1
+                     else jnp.broadcast_to(idx, (b, 1))).astype(jnp.int32)
+        x = self._embed(params, tokens)
+        x, new_cache, _ = self._decoder(params, x, positions, None, cache)
+        new_cache["index"] = cache["index"] + 1
+        x = apply_norm(self.cfg.norm, params["final_norm"], x)
+        return self._head(params, x), new_cache
+
+
+def build_model(cfg: ModelConfig) -> LM:
+    return LM(cfg)
+
+
+def param_count(params: Params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))

@@ -1,0 +1,224 @@
+"""Mamba-2 SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Chunked SSD: the sequence is split into chunks of ``chunk_len``; the
+intra-chunk term is a masked quadratic form (MXU-friendly), the inter-chunk
+term passes a compact [H, P, N] state through a ``lax.scan`` over chunks --
+sub-quadratic in sequence length, O(1)-state decode.  A naive sequential
+reference (``ssd_reference``) validates the chunked path.
+
+Parameters follow mamba2: fused in_proj -> (z, x, B, C, dt), depthwise
+causal conv over (x, B, C), per-head A/D/dt_bias, gated RMSNorm, out_proj.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import linear_init
+
+
+def ssm_init(rng, d_model: int, num_heads: int, head_dim: int,
+             state_dim: int, n_groups: int = 1, conv_width: int = 4,
+             dtype=jnp.float32) -> Dict:
+    d_inner = num_heads * head_dim
+    conv_dim = d_inner + 2 * n_groups * state_dim
+    d_in_proj = 2 * d_inner + 2 * n_groups * state_dim + num_heads
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    return {
+        "in_proj": linear_init(k1, d_model, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(k2, (conv_width, conv_dim), jnp.float32)
+                   * (1.0 / conv_width)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, num_heads)).astype(dtype),
+        "D": jnp.ones((num_heads,), dtype),
+        "dt_bias": jnp.zeros((num_heads,), dtype),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+        "out_proj": linear_init(k3, d_inner, d_model, dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv1d.  x: [B, L, C]; w: [W, C].
+
+    Returns (y, new_state) where state is the trailing (W-1) inputs.
+    """
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    # y[t] = sum_i w[i] * xp[t + i]
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(width))
+    new_state = xp[:, -(width - 1):, :] if width > 1 else state
+    return jax.nn.silu(y + b), new_state
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """Stable segment-sum: out[..., t, s] = sum_{s < r <= t} a[..., r].
+
+    Lower-triangular (t >= s); -inf above diagonal."""
+    T = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk_len: int):
+    """SSD forward.
+
+    x: [b, l, h, p]; dt: [b, l, h] (post-softplus); A: [h] (negative);
+    B, C: [b, l, g, n] (g groups broadcast over h).  Returns (y, final_state)
+    with final_state [b, h, p, n].
+    """
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hpg = h // g
+    assert l % chunk_len == 0
+    nc = l // chunk_len
+    q = chunk_len
+
+    xb = (x * dt[..., None]).reshape(b, nc, q, h, p)
+    a = (dt * A[None, None, :]).reshape(b, nc, q, h)        # log-decay
+    Bc = B.reshape(b, nc, q, g, n)
+    Cc = C.reshape(b, nc, q, g, n)
+
+    a_t = a.transpose(0, 1, 3, 2)                            # [b,nc,h,q]
+    L = jnp.exp(_segsum(a_t))                                # [b,nc,h,q,q]
+    a_cum = jnp.cumsum(a_t, axis=-1)                         # [b,nc,h,q]
+
+    # intra-chunk (quadratic within chunk, MXU einsums)
+    CB = jnp.einsum("bcqgn,bcsgn->bcgqs", Cc, Bc)            # [b,nc,g,q,s]
+    CB = jnp.repeat(CB, hpg, axis=2)                         # [b,nc,h,q,s]
+    y_intra = jnp.einsum("bchqs,bcshp->bcqhp", CB * L,
+                         xb.astype(jnp.float32))
+
+    # per-chunk right state: S_c = sum_s exp(a_cum[-1]-a_cum[s]) B_s xb_s^T
+    decay_r = jnp.exp(a_cum[..., -1:] - a_cum)               # [b,nc,h,q]
+    Bc_heads = jnp.repeat(Bc, hpg, axis=3) if g != h else Bc  # [b,nc,s,h,n]
+    S = jnp.einsum("bcshn,bchs,bcshp->bchpn",
+                   Bc_heads, decay_r, xb.astype(jnp.float32))  # [b,nc,h,p,n]
+
+    # inter-chunk scan over chunk states
+    chunk_decay = jnp.exp(a_t.sum(-1))                       # [b,nc,h]
+
+    def scan_fn(hprev, inp):
+        S_c, dec = inp                                       # [b,h,p,n],[b,h]
+        hnew = hprev * dec[..., None, None] + S_c
+        return hnew, hprev                                   # emit state *before* chunk
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    hlast, hprevs = jax.lax.scan(
+        scan_fn, h0,
+        (S.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)                 # [b,nc,h,p,n]
+
+    # inter-chunk contribution: y_t += exp(a_cum[t]) C_t . h_prev
+    decay_l = jnp.exp(a_cum)                                 # [b,nc,h,q]
+    Ch_heads = jnp.repeat(Cc, hpg, axis=3) if g != h else Cc  # [b,nc,q,h,n]
+    Ch = jnp.einsum("bcqhn,bchpn->bcqhp", Ch_heads, hprevs)
+    y_inter = Ch * decay_l.transpose(0, 1, 3, 2)[..., None]
+
+    y = (y_intra + y_inter).reshape(b, l, h, p)
+    y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y.astype(x.dtype), hlast
+
+
+def ssm_apply(params: Dict, xin: jnp.ndarray, *, num_heads: int,
+              head_dim: int, state_dim: int, n_groups: int = 1,
+              chunk_len: int = 256,
+              cache: Optional[Dict] = None
+              ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Full mamba2 mixer.  xin: [B, L, d_model].
+
+    cache = {'conv': [B, W-1, conv_dim], 'state': [B, H, P, N]} for decode
+    (L == 1); None for train/prefill (a fresh cache is returned when L>1
+    and the caller asked by passing cache={'init': True}).
+    """
+    b, l, _ = xin.shape
+    h, p, n, g = num_heads, head_dim, state_dim, n_groups
+    d_inner = h * p
+    zxbcdt = xin @ params["in_proj"]
+    z, xbc, dt_raw = jnp.split(
+        zxbcdt, [d_inner, d_inner + d_inner + 2 * g * n], axis=-1)
+    conv_state = cache.get("conv") if isinstance(cache, dict) and \
+        "conv" in cache else None
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 conv_state)
+    x, B, C = jnp.split(xbc, [d_inner, d_inner + g * n], axis=-1)
+    x = x.reshape(b, l, h, p)
+    B = B.reshape(b, l, g, n)
+    C = C.reshape(b, l, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    if cache is not None and "state" in cache and l == 1:
+        # single-step decode: h' = exp(dt*A) h + dt * B x^T ; y = C h' + D x
+        s_prev = cache["state"]                              # [b,h,p,n]
+        dt1 = dt[:, 0]                                       # [b,h]
+        decay = jnp.exp(dt1 * A[None, :])                    # [b,h]
+        hpg = h // g
+        B1 = jnp.repeat(B[:, 0], hpg, axis=1) if g != h else B[:, 0]
+        C1 = jnp.repeat(C[:, 0], hpg, axis=1) if g != h else C[:, 0]
+        Bx = jnp.einsum("bhn,bhp->bhpn", B1.astype(jnp.float32),
+                        (x[:, 0] * dt1[..., None]).astype(jnp.float32))
+        s_new = s_prev * decay[..., None, None] + Bx
+        y = jnp.einsum("bhn,bhpn->bhp", C1.astype(jnp.float32), s_new)
+        y = y + x[:, 0].astype(jnp.float32) * params["D"][None, :, None]
+        y = y[:, None].astype(xin.dtype)                     # [b,1,h,p]
+        new_cache = {"conv": new_conv, "state": s_new}
+    else:
+        pad = (-l) % chunk_len
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y, s_last = ssd_chunked(x, dt, A, B, C, params["D"], chunk_len)
+        y = y[:, :l]
+        new_cache = ({"conv": new_conv, "state": s_last}
+                     if cache is not None else None)
+
+    # gated RMSNorm (mamba2): y * silu(z), normalized
+    yf = y.reshape(b, l, d_inner).astype(jnp.float32)
+    zf = z.astype(jnp.float32)
+    yf = yf * jax.nn.silu(zf)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-6) * \
+        params["norm_scale"].astype(jnp.float32)
+    out = yf.astype(xin.dtype) @ params["out_proj"]
+    return out, new_cache
+
+
+def ssd_reference(x, dt, A, B, C, D):
+    """Naive O(L) sequential oracle for ssd_chunked (tests)."""
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hpg = h // g
+    s = jnp.zeros((b, h, p, n), jnp.float32)
+    ys = []
+    for t in range(l):
+        Bt = jnp.repeat(B[:, t], hpg, axis=1) if g != h else B[:, t]
+        Ct = jnp.repeat(C[:, t], hpg, axis=1) if g != h else C[:, t]
+        decay = jnp.exp(dt[:, t] * A[None, :])               # [b,h]
+        Bx = jnp.einsum("bhn,bhp->bhpn", Bt.astype(jnp.float32),
+                        (x[:, t] * dt[:, t][..., None]).astype(jnp.float32))
+        s = s * decay[..., None, None] + Bx
+        y = jnp.einsum("bhn,bhpn->bhp", Ct.astype(jnp.float32), s)
+        ys.append(y + x[:, t].astype(jnp.float32) * D[None, :, None])
+    return jnp.stack(ys, axis=1).astype(x.dtype), s
+
+
+def init_ssm_cache(batch: int, num_heads: int, head_dim: int,
+                   state_dim: int, n_groups: int, conv_width: int,
+                   dtype=jnp.bfloat16) -> Dict:
+    conv_dim = num_heads * head_dim + 2 * n_groups * state_dim
+    return {
+        "conv": jnp.zeros((batch, conv_width - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, num_heads, head_dim, state_dim),
+                           jnp.float32),
+    }

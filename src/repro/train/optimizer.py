@@ -1,0 +1,212 @@
+"""Optimizers built from scratch (no optax): AdamW + Adafactor.
+
+Production-memory features:
+
+* **moment dtype policy** -- AdamW first/second moments in fp32, bf16, or
+  **int8 block-quantized** (128-value blocks with an fp32 scale each).
+  bf16/int8 moments are what let the 398B Jamba fit a 256-chip v5e pod
+  (EXPERIMENTS.md §Dry-run).
+* global-norm clipping, decoupled weight decay, bias correction.
+* Adafactor (factored second moment) for memory-constrained fallbacks.
+
+States are plain pytrees -> they shard with the same FSDP rules as params
+and checkpoint/reshard transparently.  Update returns
+``(new_params, new_state, stats)`` with a structure-stable state.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+QBLOCK = 128
+
+
+# ---------------------------------------------------------------------------
+# int8 blockwise quantization for optimizer moments
+# ---------------------------------------------------------------------------
+
+def _quantize_int8(x: jnp.ndarray) -> Dict:
+    """Blockwise int8 along the LAST axis only.
+
+    A global ``reshape(-1)`` of an FSDP/TP-sharded matrix destroys its
+    sharding (GSPMD replicates the full fp32 tensor and moves it through
+    weight-shaped collectives -- measured ~19 GB/layer on the 123B dense
+    config, EXPERIMENTS.md §Perf iter 5).  Splitting only the last dim
+    into (n_blocks, 128) keeps every leading-dim sharding intact; odd
+    last dims (small replicated vectors) are zero-padded locally.
+    """
+    if x.ndim == 0:
+        x = x[None]
+    last = x.shape[-1]
+    pad = (-last) % QBLOCK
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    blocks = x.reshape(x.shape[:-1] + (-1, QBLOCK))
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def _dequantize_int8(s: Dict, like: jnp.ndarray) -> jnp.ndarray:
+    full = (s["q"].astype(jnp.float32) * s["scale"])
+    full = full.reshape(full.shape[:-2] + (-1,))
+    shape = like.shape if like.ndim else (1,)
+    out = full[..., : shape[-1]]
+    return out.reshape(like.shape)
+
+
+def _moment_init(p: jnp.ndarray, dtype: str):
+    if dtype == "int8":
+        return _quantize_int8(jnp.zeros(p.shape, jnp.float32))
+    return jnp.zeros_like(
+        p, dtype={"float32": jnp.float32, "bfloat16": jnp.bfloat16}[dtype])
+
+
+def _moment_read(m, like: jnp.ndarray, dtype: str) -> jnp.ndarray:
+    if dtype == "int8":
+        return _dequantize_int8(m, like)
+    return m.astype(jnp.float32)
+
+
+def _moment_write(x: jnp.ndarray, dtype: str):
+    if dtype == "int8":
+        return _quantize_int8(x)
+    return x.astype({"float32": jnp.float32,
+                     "bfloat16": jnp.bfloat16}[dtype])
+
+
+# ---------------------------------------------------------------------------
+# Optimizer interface
+# ---------------------------------------------------------------------------
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any, Dict]]
+    # update(grads, state, params) -> (new_params, new_state, stats)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Dtype-preserving clip: the norm is an f32 *reduction* (fused, no
+    materialized copy), the scale is applied in each leaf's own dtype --
+    casting leaves to f32 here forced GSPMD to move fp32 weight-shaped
+    gradients through every collective (2x bytes; EXPERIMENTS.md §Perf
+    iter 5)."""
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def _is_arr(x):
+    return hasattr(x, "shape") and hasattr(x, "dtype")
+
+
+def adamw(lr: Callable[[jnp.ndarray], jnp.ndarray] | float,
+          b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, max_grad_norm: float = 1.0,
+          moment_dtype: str = "float32") -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+    is_q = (lambda x: isinstance(x, dict) and set(x) == {"q", "scale"})
+
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: _moment_init(p, moment_dtype),
+                              params, is_leaf=_is_arr),
+            "v": jax.tree.map(lambda p: _moment_init(p, moment_dtype),
+                              params, is_leaf=_is_arr),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        lr_t = lr_fn(step)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)  # local elementwise cast (fuses)
+            mf = b1 * _moment_read(m, p, moment_dtype) + (1 - b1) * g
+            vf = b2 * _moment_read(v, p, moment_dtype) + (1 - b2) * g * g
+            delta = (mf / bc1) / (jnp.sqrt(vf / bc2) + eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype)
+            return new_p, _moment_write(mf, moment_dtype), \
+                _moment_write(vf, moment_dtype)
+
+        leaves_p, treedef = jax.tree_util.tree_flatten(params)
+        leaves_g = treedef.flatten_up_to(grads)
+        flat_m = jax.tree_util.tree_flatten(state["m"], is_leaf=is_q)[0] \
+            if moment_dtype == "int8" else treedef.flatten_up_to(state["m"])
+        flat_v = jax.tree_util.tree_flatten(state["v"], is_leaf=is_q)[0] \
+            if moment_dtype == "int8" else treedef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v
+               in zip(leaves_p, leaves_g, flat_m, flat_v)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "step": step}, \
+            {"grad_norm": gnorm, "lr": lr_t}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr: Callable | float = 1e-3, eps: float = 1e-30,
+              decay: float = 0.8, max_grad_norm: float = 1.0) -> Optimizer:
+    """Factored second-moment optimizer (rows+cols for 2D+; full for 1D)."""
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        def one(p):
+            if p.ndim >= 2:
+                return {"row": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "col": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                         jnp.float32)}
+            return {"full": jnp.zeros(p.shape, jnp.float32)}
+        return {"v": jax.tree.map(one, params, is_leaf=_is_arr),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        lr_t = lr_fn(step)
+        beta = 1.0 - step.astype(jnp.float32) ** (-decay)
+
+        def upd(p, g, v):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                row = beta * v["row"] + (1 - beta) * g2.mean(-1)
+                col = beta * v["col"] + (1 - beta) * g2.mean(-2)
+                rms = (row[..., :, None] * col[..., None, :]
+                       / jnp.maximum(row.mean(-1, keepdims=True)[..., None],
+                                     eps))
+                delta = g * jax.lax.rsqrt(jnp.maximum(rms, eps))
+                nv = {"row": row, "col": col}
+            else:
+                full = beta * v["full"] + (1 - beta) * g2
+                delta = g * jax.lax.rsqrt(jnp.maximum(full, eps))
+                nv = {"full": full}
+            new_p = (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype)
+            return new_p, nv
+
+        is_v = (lambda x: isinstance(x, dict)
+                and set(x) <= {"row", "col", "full"})
+        leaves_p, treedef = jax.tree_util.tree_flatten(params)
+        leaves_g = treedef.flatten_up_to(grads)
+        leaves_v = jax.tree_util.tree_flatten(state["v"], is_leaf=is_v)[0]
+        out = [upd(p, g, v) for p, g, v
+               in zip(leaves_p, leaves_g, leaves_v)]
+        return treedef.unflatten([o[0] for o in out]), \
+            {"v": treedef.unflatten([o[1] for o in out]), "step": step}, \
+            {"grad_norm": gnorm, "lr": lr_t}
+
+    return Optimizer(init, update)

@@ -1,0 +1,35 @@
+"""Learning-rate schedules (warmup-cosine / linear / rsqrt)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup_steps, 1)
+        prog = jnp.clip((s - warmup_steps) /
+                        max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak * jnp.where(s < warmup_steps, warm, cos)
+    return fn
+
+
+def warmup_linear(peak: float, warmup_steps: int, total_steps: int):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup_steps, 1)
+        prog = jnp.clip((s - warmup_steps) /
+                        max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        return peak * jnp.where(s < warmup_steps, warm, 1.0 - prog)
+    return fn
+
+
+def warmup_rsqrt(peak: float, warmup_steps: int):
+    def fn(step):
+        s = jnp.maximum(step.astype(jnp.float32), 1.0)
+        warm = s / max(warmup_steps, 1)
+        return peak * jnp.where(s < warmup_steps, warm,
+                                jnp.sqrt(warmup_steps / s))
+    return fn

@@ -1,0 +1,111 @@
+"""Table/PAC/storage-container behaviour tests."""
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (PAC, BoolRleColumn, DeltaIntColumn, GraphStore,
+                        IOMeter, PlainColumn, StringColumn, Table,
+                        TokensColumn, bitmap_to_ids, ids_to_bitmap)
+from repro.core.storage import ESSD, OSS, TMPFS, read_table, write_table
+
+
+def test_pac_from_ids_roundtrip():
+    ids = np.array([3, 5, 2047, 2048, 2049, 10_000], np.int64)
+    pac = PAC.from_ids(ids, page_size=2048)
+    assert pac.pages() == [0, 1, 4]
+    np.testing.assert_array_equal(pac.to_ids(), ids)
+    assert pac.count() == len(ids)
+
+
+def test_pac_set_algebra():
+    a = PAC.from_ids(np.array([1, 2, 3, 5000]), 2048)
+    b = PAC.from_ids(np.array([2, 3, 4, 9000]), 2048)
+    np.testing.assert_array_equal(a.intersect(b).to_ids(), [2, 3])
+    np.testing.assert_array_equal(a.union(b).to_ids(),
+                                  [1, 2, 3, 4, 5000, 9000])
+    np.testing.assert_array_equal(a.difference(b).to_ids(), [1, 5000])
+
+
+def test_pac_from_intervals():
+    pac = PAC.from_intervals(np.array([10, 4000]), np.array([20, 4100]),
+                             n=10_000, page_size=2048)
+    ids = pac.to_ids()
+    expect = np.concatenate([np.arange(10, 20), np.arange(4000, 4100)])
+    np.testing.assert_array_equal(ids, expect)
+
+
+def test_pac_select_pushdown():
+    vals = {0: np.arange(2048) * 10, 2: np.arange(2048) * 100}
+    pac = PAC(2048, {0: ids_to_bitmap(np.array([5, 7]), 0, 2048),
+                     2: ids_to_bitmap(np.array([4096 + 9]), 4096, 2048)})
+    out = pac.select(vals)
+    np.testing.assert_array_equal(out, [50, 70, 900])
+
+
+@given(st.lists(st.integers(min_value=0, max_value=100_000), min_size=1,
+                max_size=300, unique=True))
+@settings(max_examples=50, deadline=None)
+def test_pac_roundtrip_property(ids):
+    ids = np.sort(np.array(ids, np.int64))
+    pac = PAC.from_ids(ids, page_size=512)
+    np.testing.assert_array_equal(pac.to_ids(), ids)
+    assert pac.count() == len(ids)
+
+
+def test_iometer_media_model():
+    m = IOMeter()
+    m.record(180e6, 1)  # one request of 180 MB
+    assert abs(m.seconds(ESSD) - (1e-4 + 1.0)) < 1e-6
+    assert m.seconds(TMPFS) < m.seconds(ESSD) < m.seconds(OSS)
+
+
+def test_plain_column_page_reads_metered():
+    col = PlainColumn("x", np.arange(10_000, dtype=np.int32), page_size=1024)
+    meter = IOMeter()
+    out = col.read_range(100, 200, meter)
+    np.testing.assert_array_equal(out, np.arange(100, 200))
+    assert meter.nbytes == 1024 * 4  # one whole page
+
+
+def test_delta_column_read_is_cheaper_than_plain():
+    rng = np.random.default_rng(0)
+    ids = np.sort(rng.integers(0, 1 << 22, size=100_000))
+    plain = PlainColumn("x", ids.astype(np.int32), 2048)
+    delta = DeltaIntColumn("x", ids, 2048)
+    mp, md = IOMeter(), IOMeter()
+    np.testing.assert_array_equal(plain.read_range(5000, 6000, mp),
+                                  delta.read_range(5000, 6000, md))
+    assert md.nbytes < mp.nbytes
+
+
+def test_table_container_roundtrip(tmp_path):
+    n = 5000
+    rng = np.random.default_rng(1)
+    t = Table("t", n, 1024)
+    t.add(PlainColumn("a", rng.standard_normal(n).astype(np.float32), 1024))
+    t.add(DeltaIntColumn("ids", np.sort(rng.integers(0, 1 << 20, n)), 1024))
+    t.add(BoolRleColumn("<L>", rng.random(n) < 0.2, 1024))
+    t.add(StringColumn("s", [f"row{i}" for i in range(n)], 1024))
+    t.add(TokensColumn("toks", [np.arange(i % 7) for i in range(n)], 1024))
+    path = os.path.join(tmp_path, "t.gar")
+    write_table(t, path)
+    t2 = read_table(path)
+    assert t2.num_rows == n
+    np.testing.assert_allclose(t2["a"].read_all(), t["a"].read_all())
+    np.testing.assert_array_equal(t2["ids"].read_all(), t["ids"].read_all())
+    np.testing.assert_array_equal(t2["<L>"].read_all(), t["<L>"].read_all())
+    assert t2["s"].get(42) == "row42"
+    np.testing.assert_array_equal(t2["toks"].get(13), np.arange(13 % 7))
+
+
+def test_graph_store_lists(tmp_path):
+    store = GraphStore(str(tmp_path))
+    t = Table("edges", 10, 4)
+    t.add(PlainColumn("<src>", np.arange(10, dtype=np.int32), 4))
+    store.write(t)
+    assert store.list_tables() == ["edges"]
+    got = store.read("edges")
+    np.testing.assert_array_equal(got["<src>"].read_all(), np.arange(10))

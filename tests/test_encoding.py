@@ -1,0 +1,137 @@
+"""Codec round-trip + property tests (paper §4.2/§5.1 encodings)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.encoding import (ALLOWED_WIDTHS, DEFAULT_PAGE_SIZE, MINIBLOCK,
+                                 bitpack, bitunpack, delta_decode_column,
+                                 delta_decode_page, delta_decode_range,
+                                 delta_encode_column, delta_encode_page,
+                                 rle_decode_bool, rle_encode_bool)
+
+
+@pytest.mark.parametrize("bw", [1, 2, 4, 8, 16, 32])
+def test_bitpack_roundtrip(bw):
+    rng = np.random.default_rng(bw)
+    hi = (1 << bw) - 1
+    vals = rng.integers(0, hi + 1, size=101, dtype=np.uint64)
+    words = bitpack(vals, bw)
+    out = bitunpack(words, bw, len(vals))
+    np.testing.assert_array_equal(out, vals.astype(np.uint32))
+
+
+def test_bitpack_alignment_no_straddle():
+    # power-of-two widths -> whole number of values per 32-bit word
+    for bw in (1, 2, 4, 8, 16, 32):
+        assert 32 % bw == 0
+
+
+def test_delta_page_roundtrip_sorted():
+    rng = np.random.default_rng(0)
+    vals = np.sort(rng.integers(0, 1 << 30, size=2048))
+    page = delta_encode_page(vals)
+    out = delta_decode_page(page)
+    np.testing.assert_array_equal(out, vals)
+
+
+def test_delta_page_negative_deltas():
+    # dst column: sorted within src groups, drops across group boundaries
+    vals = np.array([100, 105, 107, 3, 9, 12, 2000, 2001], np.int64)
+    page = delta_encode_page(vals)
+    np.testing.assert_array_equal(delta_decode_page(page), vals)
+
+
+def test_delta_page_widths_are_allowed():
+    rng = np.random.default_rng(1)
+    vals = np.sort(rng.integers(0, 1 << 20, size=4096))
+    page = delta_encode_page(vals[:2048])
+    for w in page.bit_widths:
+        assert int(w) in ALLOWED_WIDTHS
+
+
+def test_delta_compression_on_local_ids():
+    # clustered neighbor ids => small deltas => far fewer bytes than plain
+    rng = np.random.default_rng(2)
+    base = np.cumsum(rng.integers(1, 16, size=100_000)).astype(np.int64)
+    col = delta_encode_column(base)
+    plain_bytes = base.size * 4
+    assert col.nbytes() < 0.45 * plain_bytes  # paper: 58.1%-81.0% reduction
+
+
+def test_delta_column_range_decode():
+    rng = np.random.default_rng(3)
+    vals = np.sort(rng.integers(0, 1 << 28, size=10_000))
+    col = delta_encode_column(vals, page_size=1024)
+    for lo, hi in [(0, 1), (1023, 1025), (5000, 5001), (0, 10_000),
+                   (9999, 10_000), (2048, 4096)]:
+        np.testing.assert_array_equal(delta_decode_range(col, lo, hi),
+                                      vals[lo:hi])
+
+
+def test_rle_roundtrip():
+    v = np.array([1, 1, 0, 0, 0, 1, 0, 1, 1, 1], bool)
+    col = rle_encode_bool(v)
+    np.testing.assert_array_equal(rle_decode_bool(col), v)
+    starts, ends = col.interval_starts(True)
+    got = []
+    for s, e in zip(starts, ends):
+        got.extend(range(s, e))
+    np.testing.assert_array_equal(np.flatnonzero(v), got)
+
+
+def test_rle_interval_counts():
+    v = np.zeros(1000, bool)
+    v[100:200] = True
+    v[300:301] = True
+    col = rle_encode_bool(v)
+    assert col.n_runs == 5
+    s, e = col.interval_starts(True)
+    assert list(s) == [100, 300] and list(e) == [200, 301]
+    s0, e0 = col.interval_starts(False)
+    assert list(s0) == [0, 200, 301] and list(e0) == [100, 300, 1000]
+
+
+# ---------------- property-based (hypothesis) ----------------
+
+@given(st.lists(st.integers(min_value=0, max_value=(1 << 31) - 1),
+                min_size=1, max_size=500))
+@settings(max_examples=60, deadline=None)
+def test_delta_roundtrip_property(xs):
+    vals = np.sort(np.array(xs, np.int64))
+    page = delta_encode_page(vals)
+    np.testing.assert_array_equal(delta_decode_page(page), vals)
+
+
+@given(st.lists(st.integers(min_value=-(1 << 30), max_value=1 << 30),
+                min_size=1, max_size=300))
+@settings(max_examples=40, deadline=None)
+def test_delta_roundtrip_unsorted_property(xs):
+    vals = np.array(xs, np.int64)  # arbitrary order: negatives via min_delta
+    page = delta_encode_page(vals)
+    np.testing.assert_array_equal(delta_decode_page(page), vals)
+
+
+@given(st.lists(st.booleans(), min_size=0, max_size=400))
+@settings(max_examples=60, deadline=None)
+def test_rle_roundtrip_property(bits):
+    v = np.array(bits, bool)
+    col = rle_encode_bool(v)
+    np.testing.assert_array_equal(rle_decode_bool(col), v)
+    # interval invariants: positions strictly increasing, bounded by n
+    p = col.positions
+    assert p[0] == 0 and p[-1] == len(v)
+    assert (np.diff(p) > 0).all() or len(v) == 0
+
+
+@given(st.integers(min_value=1, max_value=5000),
+       st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=30, deadline=None)
+def test_delta_column_random_range_property(n, seed):
+    rng = np.random.default_rng(seed)
+    vals = np.sort(rng.integers(0, 1 << 26, size=n))
+    col = delta_encode_column(vals, page_size=256)
+    lo = int(rng.integers(0, n))
+    hi = int(rng.integers(lo, n)) + 1
+    np.testing.assert_array_equal(delta_decode_range(col, lo, hi),
+                                  vals[lo:hi])

@@ -1,0 +1,185 @@
+"""Graph-level behaviour: builder, neighbor retrieval, label filtering."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (BY_DST, BY_SRC, ENC_GRAPHAR, ENC_OFFSET, ENC_PLAIN,
+                        EdgeTypeSchema, GraphArBuilder, GraphSchema, IOMeter,
+                        L, PropertySchema, VertexTypeSchema, build_adjacency,
+                        degrees_topk, fetch_properties, filter_binary_columns,
+                        filter_rle_interval, filter_string, intervals_to_ids,
+                        k_hop, neighbor_properties, retrieve_neighbors,
+                        retrieve_neighbors_scan)
+from repro.core.vertex import (LABEL_ENC_PLAIN, LABEL_ENC_RLE,
+                               LABEL_ENC_STRING, VertexTable)
+from repro.data.synthetic import clustered_labels, powerlaw_graph
+
+
+def small_graph(seed=0, n=3000, deg=8):
+    src, dst = powerlaw_graph(n, deg, seed=seed)
+    return n, src, dst
+
+
+def brute_neighbors(src, dst, v):
+    return np.sort(dst[src == v])
+
+
+@pytest.mark.parametrize("encoding", [ENC_OFFSET, ENC_GRAPHAR])
+def test_adjacency_neighbors_match_bruteforce(encoding):
+    n, src, dst = small_graph()
+    adj = build_adjacency(src, dst, n, n, BY_SRC, encoding, page_size=256)
+    for v in [0, 1, 17, n - 1, int(np.argmax(np.bincount(src, minlength=n)))]:
+        np.testing.assert_array_equal(adj.neighbor_ids(v),
+                                      brute_neighbors(src, dst, v))
+
+
+def test_csc_layout_incoming_neighbors():
+    n, src, dst = small_graph(seed=2)
+    adj = build_adjacency(src, dst, n, n, BY_DST, ENC_GRAPHAR, page_size=256)
+    v = int(dst[0])
+    np.testing.assert_array_equal(adj.neighbor_ids(v), np.sort(src[dst == v]))
+
+
+def test_plain_scan_baseline_matches():
+    n, src, dst = small_graph(seed=3)
+    plain = build_adjacency(src, dst, n, n, BY_SRC, ENC_PLAIN, page_size=256)
+    v = int(src[5])
+    np.testing.assert_array_equal(plain.neighbor_ids_scan(v),
+                                  brute_neighbors(src, dst, v))
+
+
+def test_retrieval_pac_and_pushdown():
+    n, src, dst = small_graph(seed=4)
+    adj = build_adjacency(src, dst, n, n, BY_SRC, ENC_GRAPHAR, page_size=256)
+    vschema = VertexTypeSchema("doc", [PropertySchema("score", "float32")],
+                               page_size=256)
+    score = np.arange(n, dtype=np.float32) * 0.5
+    vt = VertexTable.build(vschema, {"score": score})
+    v = int(src[0])
+    pac = retrieve_neighbors(adj, v, vt.page_size)
+    np.testing.assert_array_equal(pac.to_ids(), brute_neighbors(src, dst, v))
+    vals = fetch_properties(pac, vt, "score")
+    np.testing.assert_allclose(vals, score[brute_neighbors(src, dst, v)])
+
+
+def test_retrieval_io_ordering_plain_vs_offset_vs_delta():
+    """Fig. 9's mechanism: scan >> offset-plain > offset-delta in bytes."""
+    n, src, dst = small_graph(seed=5, n=20_000, deg=16)
+    plain = build_adjacency(src, dst, n, n, BY_SRC, ENC_PLAIN, page_size=2048)
+    offset = build_adjacency(src, dst, n, n, BY_SRC, ENC_OFFSET,
+                             page_size=2048)
+    graphar = build_adjacency(src, dst, n, n, BY_SRC, ENC_GRAPHAR,
+                              page_size=2048)
+    v = int(degrees_topk(offset)[0])
+    m1, m2, m3 = IOMeter(), IOMeter(), IOMeter()
+    a = retrieve_neighbors_scan(plain, v, 2048, m1).to_ids()
+    b = retrieve_neighbors(offset, v, 2048, m2).to_ids()
+    c = retrieve_neighbors(graphar, v, 2048, m3).to_ids()
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(b, c)
+    assert m1.nbytes > 5 * m2.nbytes    # offset index avoids the full scan
+    assert m2.nbytes > m3.nbytes        # delta shrinks the touched pages
+
+
+def test_khop_traversal():
+    n, src, dst = small_graph(seed=6)
+    adj = build_adjacency(src, dst, n, n, BY_SRC, ENC_GRAPHAR, page_size=256)
+    seeds = np.array([int(src[0])])
+    one = k_hop(adj, seeds, 1)
+    two = k_hop(adj, seeds, 2)
+    assert set(one) <= set(two)
+    expect1 = np.union1d(seeds, brute_neighbors(src, dst, int(seeds[0])))
+    np.testing.assert_array_equal(one, expect1)
+
+
+# --------------------------- label filtering -----------------------------
+
+def make_vertex_tables(n=20_000, seed=7):
+    names = ["Asian", "Enrollee", "Student"]
+    labels = clustered_labels(n, names, density=0.3, run_scale=512, seed=seed)
+    schema = VertexTypeSchema("person", [], labels=names, page_size=1024)
+    vts = {
+        enc: VertexTable.build(schema, {}, labels, enc, num_vertices=n)
+        for enc in (LABEL_ENC_RLE, LABEL_ENC_PLAIN, LABEL_ENC_STRING)
+    }
+    return vts, labels
+
+
+@pytest.mark.parametrize("cond_fn", [
+    lambda: L("Asian"),
+    lambda: ~L("Asian"),
+    lambda: L("Asian") & L("Enrollee"),
+    lambda: (L("Asian") & ~L("Enrollee")) | L("Student"),
+])
+def test_label_filtering_all_methods_agree(cond_fn):
+    vts, labels = make_vertex_tables()
+    cond = cond_fn()
+    env = {k: np.asarray(v, bool) for k, v in labels.items()}
+    expect = np.flatnonzero(cond.evaluate(env))
+    got_interval = intervals_to_ids(filter_rle_interval(vts["rle"], cond))
+    got_plain = filter_binary_columns(vts["plain"], cond)
+    got_rle_scan = filter_binary_columns(vts["rle"], cond)
+    got_string = filter_string(vts["string"], cond)
+    np.testing.assert_array_equal(got_interval, expect)
+    np.testing.assert_array_equal(got_plain, expect)
+    np.testing.assert_array_equal(got_rle_scan, expect)
+    np.testing.assert_array_equal(got_string, expect)
+
+
+def test_label_storage_ordering():
+    """Fig. 11: RLE << binary(plain) << string for clustered labels."""
+    vts, _ = make_vertex_tables()
+    rle = vts["rle"].labels_nbytes()
+    plain = vts["plain"].labels_nbytes()
+    string = vts["string"].labels_nbytes()
+    assert rle < plain < string
+
+
+@given(st.integers(min_value=0, max_value=1000))
+@settings(max_examples=25, deadline=None)
+def test_complex_filter_property(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(64, 4000))
+    names = ["A", "B", "C"]
+    labels = {m: rng.random(n) < rng.random() for m in names}
+    schema = VertexTypeSchema("v", [], labels=names, page_size=128)
+    vt = VertexTable.build(schema, {}, labels, LABEL_ENC_RLE, num_vertices=n)
+    cond = (L("A") & ~L("B")) | L("C")
+    env = {k: np.asarray(v, bool) for k, v in labels.items()}
+    expect = np.flatnonzero(cond.evaluate(env))
+    got = intervals_to_ids(filter_rle_interval(vt, cond))
+    np.testing.assert_array_equal(got, expect)
+
+
+# --------------------------- builder/YAML --------------------------------
+
+def test_builder_end_to_end_and_yaml(tmp_path):
+    n, src, dst = small_graph(seed=8, n=2000, deg=6)
+    names = ["Hot"]
+    labels = clustered_labels(n, names, seed=1)
+    b = GraphArBuilder("g")
+    b.add_vertices(
+        VertexTypeSchema("doc", [PropertySchema("score", "float32")],
+                         labels=names, page_size=256),
+        {"score": np.arange(n, dtype=np.float32)}, labels)
+    b.add_edges(EdgeTypeSchema("doc", "links", "doc", page_size=256,
+                               adjacency=["by_src", "by_dst"]), src, dst)
+    g = b.build()
+    assert b.timing.total >= 0
+    v = int(src[0])
+    np.testing.assert_array_equal(
+        g.adjacency("doc-links-doc", BY_SRC).neighbor_ids(v),
+        brute_neighbors(src, dst, v))
+    # YAML round trip
+    y = g.schema.to_yaml()
+    g2 = GraphSchema.from_yaml(y)
+    assert "doc-links-doc" in g2.edge_types
+    assert g2.vertex_types["doc"].labels == ["Hot"]
+    # persistence round trip
+    g.save(str(tmp_path))
+    from repro.core import GraphStore
+    store = GraphStore(str(tmp_path))
+    assert "vertex_doc" in store.list_tables()
+    schema = store.read_schema_yaml()
+    assert schema.name == "g"

@@ -1,0 +1,204 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles +
+cross-checks against the numpy storage-plane codecs."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.encoding import (delta_decode_column, delta_encode_column,
+                                 rle_encode_bool)
+from repro.core.pac import PAC, bitmap_to_ids
+from repro.kernels.pac_decode import kernel as pdk
+from repro.kernels.pac_decode import ops as pdo
+from repro.kernels.pac_decode import ref as pdr
+from repro.kernels.rle_filter import ops as rfo
+from repro.kernels.bitmap_select import kernel as bsk
+from repro.kernels.bitmap_select import ops as bso
+from repro.kernels.bitmap_select import ref as bsr
+from repro.kernels.flash_attention import kernel as fak
+from repro.kernels.flash_attention import ref as far
+
+
+# ------------------------------ pac_decode -------------------------------
+
+@pytest.mark.parametrize("page_size", [256, 1024, 2048])
+@pytest.mark.parametrize("spread", [8, 4096, 1 << 18])  # ids stay < 2^31
+def test_delta_decode_kernel_matches_numpy(page_size, spread):
+    rng = np.random.default_rng(page_size + spread)
+    n = 3 * page_size + 17   # partial last page
+    vals = np.sort(rng.integers(0, spread * n, size=n))
+    col = delta_encode_column(vals, page_size)
+    got = pdo.decode_pages(col, 0, len(col.pages), use_pallas=True)
+    np.testing.assert_array_equal(got, vals)
+    got_ref = pdo.decode_pages(col, 0, len(col.pages), use_pallas=False)
+    np.testing.assert_array_equal(got_ref, vals)
+
+
+def test_delta_decode_kernel_vs_ref_same_inputs():
+    rng = np.random.default_rng(7)
+    vals = np.sort(rng.integers(0, 1 << 26, size=4096))
+    col = delta_encode_column(vals, 1024)
+    args = [jnp.asarray(a) for a in pdo.pack_pages(col, 0, len(col.pages))]
+    out_k = pdk.delta_decode_pallas(*args, page_size=1024)
+    out_r = pdr.decode_pages_ref(*args, page_size=1024)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+@given(st.integers(min_value=1, max_value=3000),
+       st.integers(min_value=0, max_value=1 << 16))
+@settings(max_examples=20, deadline=None)
+def test_delta_decode_kernel_property(n, seed):
+    rng = np.random.default_rng(seed)
+    vals = np.sort(rng.integers(0, 1 << 24, size=n))
+    col = delta_encode_column(vals, 512)
+    got = pdo.decode_pages(col, 0, len(col.pages), use_pallas=True)
+    np.testing.assert_array_equal(got, vals)
+
+
+def test_bitmap_kernel_matches_pac():
+    rng = np.random.default_rng(3)
+    ids = np.unique(rng.integers(0, 40_000, size=2000)).astype(np.int64)
+    n_words = -(-40_000 // 32)
+    bm_k = pdo.ids_to_bitmap(ids, 0, n_words, use_pallas=True)
+    bm_r = pdo.ids_to_bitmap(ids, 0, n_words, use_pallas=False)
+    np.testing.assert_array_equal(bm_k, bm_r)
+    np.testing.assert_array_equal(bitmap_to_ids(bm_k, 0), ids)
+
+
+def test_bitmap_kernel_with_duplicates_and_base():
+    ids = np.array([64, 64, 64, 100, 4000, 4000], np.int64)
+    bm = pdo.ids_to_bitmap(ids, 64, 256, use_pallas=True)
+    np.testing.assert_array_equal(bitmap_to_ids(bm, 64),
+                                  np.unique(ids))
+
+
+def test_fused_decode_bitmap_page_aligned():
+    rng = np.random.default_rng(11)
+    vals = np.sort(rng.integers(0, 30_000, size=2048))
+    vals = np.unique(vals)
+    pad = 2048 - len(vals) % 2048 if len(vals) % 2048 else 0
+    col = delta_encode_column(vals, 1024)
+    lo, hi = 0, col.count
+    n_words = -(-30_000 // 32)
+    bm_k = pdo.decode_range_to_bitmap(col, lo, hi, 0, n_words,
+                                      use_pallas=True)
+    bm_r = pdo.decode_range_to_bitmap(col, lo, hi, 0, n_words,
+                                      use_pallas=False)
+    np.testing.assert_array_equal(bm_k, bm_r)
+    np.testing.assert_array_equal(bitmap_to_ids(bm_k, 0), vals)
+
+
+def test_retrieve_pac_engines_agree():
+    rng = np.random.default_rng(5)
+    vals = np.sort(rng.integers(0, 100_000, size=10_000))
+    col = delta_encode_column(vals, 2048)
+    lo, hi = 3000, 7003
+    pac_np = PAC.from_ids(vals[lo:hi], 2048)
+    pac_k = pdo.retrieve_pac(col, lo, hi, 2048, use_pallas=True)
+    np.testing.assert_array_equal(pac_k.to_ids(), pac_np.to_ids())
+
+
+# ------------------------------ rle_filter -------------------------------
+
+@pytest.mark.parametrize("n", [100, 2048, 50_000])
+@pytest.mark.parametrize("want", [True, False])
+def test_rle_filter_kernel_matches_dense(n, want):
+    rng = np.random.default_rng(n)
+    dense = rng.random(n) < 0.3
+    col = rle_encode_bool(dense)
+    bm_k = rfo.rle_to_bitmap(col, want, use_pallas=True)
+    bm_r = rfo.rle_to_bitmap(col, want, use_pallas=False)
+    np.testing.assert_array_equal(bm_k, bm_r)
+    expect = np.flatnonzero(dense == want)
+    np.testing.assert_array_equal(bitmap_to_ids(bm_k, 0), expect)
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=500))
+@settings(max_examples=20, deadline=None)
+def test_rle_filter_property(bits):
+    dense = np.array(bits, bool)
+    col = rle_encode_bool(dense)
+    bm = rfo.rle_to_bitmap(col, True, use_pallas=True)
+    np.testing.assert_array_equal(bitmap_to_ids(bm, 0), np.flatnonzero(dense))
+
+
+# ----------------------------- bitmap_select -----------------------------
+
+@pytest.mark.parametrize("page_size", [256, 2048])
+def test_bitmap_select_matches_ref(page_size):
+    rng = np.random.default_rng(page_size)
+    n_pages = 3
+    vals = rng.standard_normal((n_pages, page_size)).astype(np.float32)
+    dense = rng.random((n_pages, page_size)) < 0.2
+    words = np.zeros((n_pages, page_size // 32), np.uint32)
+    for p in range(n_pages):
+        idx = np.flatnonzero(dense[p])
+        np.bitwise_or.at(words[p], idx >> 5,
+                         np.uint32(1) << (idx & 31).astype(np.uint32))
+    out_k, cnt_k = bsk.bitmap_select_pallas(jnp.asarray(vals),
+                                            jnp.asarray(words),
+                                            page_size=page_size)
+    out_r, cnt_r = bsr.bitmap_select_ref(jnp.asarray(vals),
+                                         jnp.asarray(words), page_size)
+    np.testing.assert_array_equal(np.asarray(cnt_k).ravel(),
+                                  np.asarray(cnt_r).ravel())
+    for p in range(n_pages):
+        c = int(np.asarray(cnt_k)[p, 0])
+        np.testing.assert_allclose(np.asarray(out_k)[p, :c],
+                                   vals[p][dense[p]])
+        np.testing.assert_allclose(np.asarray(out_k)[p, :c],
+                                   np.asarray(out_r)[p, :c])
+
+
+def test_bitmap_select_ops_end_to_end():
+    rng = np.random.default_rng(1)
+    n = 10_000
+    vals = rng.standard_normal(n).astype(np.float32)
+    ids = np.unique(rng.integers(0, n, 500))
+    pac = PAC.from_ids(ids, 2048)
+    pages = {p: vals[p * 2048:(p + 1) * 2048] for p in pac.pages()}
+    got = bso.select_from_pages(pac, pages, use_pallas=True)
+    np.testing.assert_allclose(got, vals[ids])
+
+
+# ---------------------------- flash_attention ----------------------------
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("seq,d", [(128, 64), (256, 64), (384, 128)])
+def test_flash_attention_matches_ref(causal, seq, d):
+    rng = np.random.default_rng(seq + d)
+    bh = 2
+    q = rng.standard_normal((bh, seq, d)).astype(np.float32)
+    k = rng.standard_normal((bh, seq, d)).astype(np.float32)
+    v = rng.standard_normal((bh, seq, d)).astype(np.float32)
+    out = fak.flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                              causal=causal, block_q=128, block_k=128)
+    ref = far.attention_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                            causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((1, 256, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 256, 64)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 256, 64)), jnp.bfloat16)
+    out = fak.flash_attention(q, k, v, causal=True)
+    ref = far.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=0.1, atol=0.1)
+
+
+def test_flash_attention_gqa_wrapper():
+    from repro.kernels.flash_attention import ops as fao
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(rng.standard_normal((2, 8, 128, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 2, 128, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 2, 128, 64)), jnp.float32)
+    out = fao.mha(q, k, v, causal=True, use_pallas=True)
+    ref = fao.mha(q, k, v, causal=True, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)

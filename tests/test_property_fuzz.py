@@ -1,0 +1,74 @@
+"""Property-based fuzzing of the storage plane invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (BY_SRC, ENC_GRAPHAR, DeltaIntColumn, IOMeter,
+                        PlainColumn, Table, build_adjacency)
+from repro.core.storage import read_table, write_table
+
+
+@given(st.integers(min_value=1, max_value=2000),
+       st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=1, max_value=6))
+@settings(max_examples=25, deadline=None)
+def test_read_rows_concat_matches_naive(n, seed, n_ranges):
+    rng = np.random.default_rng(seed)
+    vals = np.sort(rng.integers(0, 1 << 24, size=n))
+    col = DeltaIntColumn("x", vals, page_size=128)
+    los = rng.integers(0, n, n_ranges)
+    his = np.minimum(los + rng.integers(0, 300, n_ranges), n)
+    got = col.read_rows_concat(los, his)
+    want = (np.concatenate([vals[l:h] for l, h in zip(los, his)])
+            if n_ranges else np.zeros(0))
+    np.testing.assert_array_equal(got, want)
+
+
+@given(st.integers(min_value=1, max_value=2000),
+       st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=20, deadline=None)
+def test_container_roundtrip_fuzz(n, seed):
+    import os
+    import tempfile
+    rng = np.random.default_rng(seed)
+    t = Table("t", n, page_size=64)
+    t.add(PlainColumn("f", rng.standard_normal(n).astype(np.float32), 64))
+    t.add(DeltaIntColumn("i", np.sort(rng.integers(0, 1 << 20, n)), 64))
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.gar")
+        write_table(t, path)
+        t2 = read_table(path)
+        np.testing.assert_allclose(t2["f"].read_all(), t["f"].read_all())
+        np.testing.assert_array_equal(t2["i"].read_all(),
+                                      t["i"].read_all())
+
+
+@given(st.integers(min_value=2, max_value=400),
+       st.integers(min_value=0, max_value=5000))
+@settings(max_examples=20, deadline=None)
+def test_adjacency_offsets_invariants(n, seed):
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(1, 4 * n))
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    adj = build_adjacency(src, dst, n, n, BY_SRC, ENC_GRAPHAR, page_size=64)
+    off = np.asarray(adj.offsets["<offset>"].read_all())
+    # monotone, bounded, degree-consistent
+    assert off[0] == 0 and off[-1] == m
+    assert (np.diff(off) >= 0).all()
+    deg = np.bincount(src, minlength=n)
+    np.testing.assert_array_equal(np.diff(off), deg)
+    # random vertex neighbor check
+    v = int(rng.integers(0, n))
+    np.testing.assert_array_equal(adj.neighbor_ids(v), np.sort(dst[src == v]))
+
+
+def test_io_meter_monotone_under_page_growth():
+    rng = np.random.default_rng(0)
+    vals = np.sort(rng.integers(0, 1 << 22, size=50_000))
+    col = DeltaIntColumn("x", vals, page_size=1024)
+    m_small, m_big = IOMeter(), IOMeter()
+    col.read_range(100, 200, m_small)
+    col.read_range(100, 5000, m_big)
+    assert m_big.nbytes >= m_small.nbytes

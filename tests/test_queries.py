@@ -1,0 +1,67 @@
+"""End-to-end query equivalence: GraphAr vs Acero-like baseline (§6.5)."""
+import numpy as np
+import pytest
+
+from repro.core import IOMeter
+from repro.core.query import (bi2_acero, bi2_graphar, build_snb_baseline,
+                              build_snb_graphar, ic8_acero, ic8_graphar,
+                              is3_acero, is3_graphar)
+from repro.data.synthetic import ldbc_like
+
+
+@pytest.fixture(scope="module")
+def snb():
+    return ldbc_like(scale=1, seed=0)
+
+
+@pytest.fixture(scope="module")
+def g(snb):
+    return build_snb_graphar(snb, page_size=1024)
+
+
+@pytest.fixture(scope="module")
+def base(snb):
+    return build_snb_baseline(snb, page_size=1024)
+
+
+def test_is3_equivalence(snb, g, base):
+    # probe several persons incl. a high-degree one
+    deg = np.bincount(snb.knows_src, minlength=snb.num_persons)
+    persons = [0, 17, int(np.argmax(deg))]
+    for p in persons:
+        f1, d1 = is3_graphar(g, p)
+        f2, d2 = is3_acero(base, p)
+        np.testing.assert_array_equal(np.sort(f1), np.sort(f2))
+        np.testing.assert_array_equal(d1, d2)  # identical date ordering
+
+
+def test_is3_io_advantage(snb, g, base):
+    deg = np.bincount(snb.knows_src, minlength=snb.num_persons)
+    p = int(np.argmax(deg))
+    m1, m2 = IOMeter(), IOMeter()
+    is3_graphar(g, p, m1)
+    is3_acero(base, p, m2)
+    assert m1.nbytes < m2.nbytes
+
+
+def test_ic8_equivalence(snb, g, base):
+    creators = np.unique(snb.has_creator_person)
+    for p in [int(creators[0]), int(creators[len(creators) // 2])]:
+        r1, d1 = ic8_graphar(g, p)
+        r2, d2 = ic8_acero(base, p)
+        np.testing.assert_array_equal(r1, r2)
+        np.testing.assert_array_equal(d1, d2)
+
+
+def test_bi2_equivalence(snb, g, base):
+    for cls in ["TagClass0", "TagClass3"]:
+        c1 = bi2_graphar(g, cls)
+        c2 = bi2_acero(base, cls)
+        assert c1 == c2
+
+
+def test_bi2_io_advantage(snb, g, base):
+    m1, m2 = IOMeter(), IOMeter()
+    bi2_graphar(g, "TagClass1", m1)
+    bi2_acero(base, "TagClass1", m2)
+    assert m1.nbytes < m2.nbytes
