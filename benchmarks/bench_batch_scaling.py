@@ -1,0 +1,68 @@
+"""Batch-size scaling of the batched retrieval plane.
+
+For batch = 1/8/64/512 vertices, compares one ``retrieve_neighbors_batch``
+call (vectorized offsets gather + page-deduplicated decode + merged PAC)
+against the per-vertex ``retrieve_neighbors`` Python loop, across all
+three decode engines.  Also reports the I/O plane's view (bytes/requests
+saved by page dedup) and the packed-page cache effect on the kernel
+engines' hot path.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (BY_SRC, ENC_GRAPHAR, IOMeter, build_adjacency,
+                        pack_column, retrieve_neighbors,
+                        retrieve_neighbors_batch)
+
+from .util import emit, timeit
+
+BATCH_SIZES = (1, 8, 64, 512)
+ENGINES = ("numpy", "jax", "pallas")
+N = 20_000
+DEG = 8
+PAGE = 2048
+
+
+def run() -> None:
+    from repro.data.synthetic import powerlaw_graph
+    src, dst = powerlaw_graph(N, DEG, locality=0.85, seed=11)
+    adj = build_adjacency(src, dst, N, N, BY_SRC, ENC_GRAPHAR,
+                          page_size=PAGE)
+
+    # packed-page cache: cold build vs hot reuse (per-query cost removed)
+    col = adj.table["<dst>"].encoded
+    col.packed_cache = None
+    t_cold = timeit(lambda: (setattr(col, "packed_cache", None),
+                             pack_column(col)), repeats=3)
+    t_hot = timeit(lambda: pack_column(col), repeats=5)
+    emit("batch_pack_pages_cold", t_cold, "")
+    emit("batch_pack_pages_hot", t_hot,
+         f"cold_over_hot={t_cold / max(t_hot, 1e-9):.0f}x")
+
+    for engine in ENGINES:
+        for bs in BATCH_SIZES:
+            # same batch across engines so rows are comparable
+            vs = np.random.default_rng(bs).integers(0, N, bs)
+            reps = 1 if engine == "pallas" else 3
+
+            t_loop = timeit(
+                lambda: [retrieve_neighbors(adj, int(v), PAGE,
+                                            engine=engine) for v in vs],
+                repeats=reps)
+            t_batch = timeit(
+                lambda: retrieve_neighbors_batch(adj, vs, PAGE,
+                                                 engine=engine),
+                repeats=reps)
+
+            m_loop, m_batch = IOMeter(), IOMeter()
+            for v in vs:
+                retrieve_neighbors(adj, int(v), PAGE, m_loop, engine)
+            retrieve_neighbors_batch(adj, vs, PAGE, m_batch, engine)
+
+            emit(f"batch_scaling_{engine}_bs{bs}", t_batch,
+                 f"loop_us={t_loop:.2f};speedup={t_loop / t_batch:.2f};"
+                 f"io_bytes_batch={m_batch.nbytes};"
+                 f"io_bytes_loop={m_loop.nbytes};"
+                 f"io_reqs_batch={m_batch.nrequests};"
+                 f"io_reqs_loop={m_loop.nrequests}")

@@ -7,7 +7,7 @@ import numpy as np
 
 from repro.core import (BY_SRC, ENC_GRAPHAR, ENC_OFFSET, ENC_PLAIN, IOMeter,
                         build_adjacency, degrees_topk, retrieve_neighbors,
-                        retrieve_neighbors_scan)
+                        retrieve_neighbors_batch, retrieve_neighbors_scan)
 from repro.core.storage import ESSD
 
 from .graphs import TOPOLOGY_GRAPHS, topology
@@ -52,3 +52,18 @@ def run() -> None:
         e2e_gar = io_gar + t_gar / 1e6
         emit(f"fig9_neighbor_{name}_e2e_modeled_speedup", 0.0,
              f"{e2e_plain/e2e_gar:.1f}x")
+
+        # batched plane: 64 high-degree vertices as ONE retrieval vs a
+        # per-vertex loop (detailed scaling: benchmarks/bench_batch_scaling)
+        vs = degrees_topk(graphar, 64)
+        t_loop = timeit(lambda: [retrieve_neighbors(graphar, int(v), 2048)
+                                 for v in vs], repeats=3)
+        t_bat = timeit(lambda: retrieve_neighbors_batch(graphar, vs, 2048),
+                       repeats=3)
+        m_loop, m_bat = IOMeter(), IOMeter()
+        for v in vs:
+            retrieve_neighbors(graphar, int(v), 2048, m_loop)
+        retrieve_neighbors_batch(graphar, vs, 2048, m_bat)
+        emit(f"fig9_neighbor_{name}_graphar_batch64", t_bat,
+             f"loop_us={t_loop:.2f};speedup={t_loop/t_bat:.2f};"
+             f"io_bytes_saved={m_loop.nbytes - m_bat.nbytes}")

@@ -8,10 +8,10 @@ from __future__ import annotations
 import argparse
 import time
 
-from . import (bench_complex_filter, bench_e2e, bench_kernels,
-               bench_label_scaling, bench_label_storage, bench_media,
-               bench_neighbor, bench_pipeline, bench_simple_filter,
-               bench_storage, bench_transform)
+from . import (bench_batch_scaling, bench_complex_filter, bench_e2e,
+               bench_kernels, bench_label_scaling, bench_label_storage,
+               bench_media, bench_neighbor, bench_pipeline,
+               bench_simple_filter, bench_storage, bench_transform)
 from .util import header
 
 SUITES = {
@@ -22,6 +22,7 @@ SUITES = {
     "fig12_simple_filter": bench_simple_filter.run,
     "fig13_complex_filter": bench_complex_filter.run,
     "fig14_label_scaling": bench_label_scaling.run,
+    "batch_scaling": bench_batch_scaling.run,
     "table2_media": bench_media.run,
     "table3_e2e": bench_e2e.run,
     "pipeline": bench_pipeline.run,

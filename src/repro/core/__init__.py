@@ -2,18 +2,20 @@
 from .builder import Graph, GraphArBuilder, TransformTiming
 from .edge import (BY_DST, BY_SRC, ENC_GRAPHAR, ENC_OFFSET, ENC_PLAIN,
                    AdjacencyTable, EdgeTable, build_adjacency)
-from .encoding import (DEFAULT_PAGE_SIZE, DeltaColumn, DeltaPage, RleColumn,
-                       delta_decode_column, delta_decode_page,
-                       delta_encode_column, delta_encode_page,
+from .encoding import (DEFAULT_PAGE_SIZE, DeltaColumn, DeltaPage, PackedPages,
+                       RleColumn, delta_decode_column, delta_decode_page,
+                       delta_encode_column, delta_encode_page, pack_column,
                        rle_decode_bool, rle_encode_bool)
 from .labels import (And, Cond, L, Not, Or, complex_filter_intervals,
                      filter_binary_columns, filter_rle_interval,
                      filter_string, intervals_count, intervals_to_ids,
                      intervals_to_pac, simple_filter_intervals)
-from .neighbor import (degrees_topk, fetch_properties, k_hop,
-                       neighbor_properties, retrieve_neighbors,
-                       retrieve_neighbors_scan)
-from .pac import PAC, bitmap_to_ids, ids_to_bitmap, words_per_page
+from .neighbor import (decode_edge_ranges, degrees_topk, fetch_properties,
+                       k_hop, neighbor_ids_batch, neighbor_properties,
+                       neighbor_properties_batch, retrieve_neighbors,
+                       retrieve_neighbors_batch, retrieve_neighbors_scan)
+from .pac import (PAC, bitmap_to_ids, ids_to_bitmap, pages_union,
+                  words_per_page)
 from .schema import EdgeTypeSchema, GraphSchema, PropertySchema, VertexTypeSchema
 from .storage import ESSD, MEDIA, OSS, TMPFS, GraphStore, IOMeter, MediaModel
 from .table import (BoolPlainColumn, BoolRleColumn, DeltaIntColumn,

@@ -58,6 +58,33 @@ class AdjacencyTable:
         pair = col.read_range(v, v + 2, meter)
         return int(pair[0]), int(pair[1])
 
+    def offsets_at(self, rows, meter=None) -> np.ndarray:
+        """Offset values at arbitrary rows, one page-deduplicated gather."""
+        if self.offsets is None:
+            raise ValueError("no <offset> table (plain layout)")
+        rows = np.asarray(rows, np.int64)
+        col = self.offsets["<offset>"]
+        return np.asarray(col.read_rows_concat(rows, rows + 1, meter),
+                          np.int64)
+
+    def edge_ranges_batch(self, vs, meter=None
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized :meth:`edge_range` for a batch of key vertices.
+
+        One deduplicated gather of the <offset> column yields every
+        ``[lo, hi)`` pair; pages shared between vertices are charged once
+        (vs. once per vertex in the scalar path).
+        """
+        if self.offsets is None:
+            raise ValueError("no <offset> table (plain layout)")
+        vs = np.asarray(vs, np.int64)
+        if vs.size == 0:
+            return np.zeros(0, np.int64), np.zeros(0, np.int64)
+        col = self.offsets["<offset>"]
+        pairs = np.asarray(col.read_rows_concat(vs, vs + 2, meter),
+                           np.int64).reshape(-1, 2)
+        return pairs[:, 0], pairs[:, 1]
+
     def neighbor_ids(self, v: int, meter=None) -> np.ndarray:
         """Sorted neighbor internal IDs of ``v`` (decodes touched pages only)."""
         lo, hi = self.edge_range(v, meter)

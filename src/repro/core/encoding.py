@@ -253,13 +253,82 @@ def plain_decode(buf: bytes, dtype: np.dtype, count: int) -> np.ndarray:
 # --------------------------------------------------------------------------
 
 @dataclasses.dataclass
+class PackedPages:
+    """Column-wide packed-page batch arrays (the kernels' VMEM layout).
+
+    One row per data page, padded to the fixed shapes the pac_decode
+    kernels tile over.  Built once per column and cached on
+    :class:`DeltaColumn` so repeated queries stop re-materializing the
+    batch arrays (a measurable hot-path cost at serving batch rates).
+    """
+
+    first: np.ndarray         # int32  [n_pages, 1]
+    min_deltas: np.ndarray    # int32  [n_pages, n_mini]
+    bit_widths: np.ndarray    # int32  [n_pages, n_mini]
+    word_offsets: np.ndarray  # int32  [n_pages, n_mini]
+    packed: np.ndarray        # uint32 [n_pages, max_words]
+    counts: np.ndarray        # int32  [n_pages, 1]
+
+    @property
+    def n_pages(self) -> int:
+        return self.first.shape[0]
+
+    def slice(self, p0: int, p1: int) -> Tuple[np.ndarray, ...]:
+        """Zero-copy views of pages [p0, p1)."""
+        return (self.first[p0:p1], self.min_deltas[p0:p1],
+                self.bit_widths[p0:p1], self.word_offsets[p0:p1],
+                self.packed[p0:p1], self.counts[p0:p1])
+
+    def gather(self, pages) -> Tuple[np.ndarray, ...]:
+        """Row-gathered copies for an arbitrary (sorted) page list."""
+        idx = np.asarray(pages, np.int64)
+        return (self.first[idx], self.min_deltas[idx], self.bit_widths[idx],
+                self.word_offsets[idx], self.packed[idx], self.counts[idx])
+
+
+@dataclasses.dataclass
 class DeltaColumn:
     count: int
     page_size: int
     pages: List[DeltaPage]
+    #: lazily built by :func:`pack_column`; not part of the storage format.
+    packed_cache: "PackedPages | None" = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def nbytes(self) -> int:
         return sum(p.nbytes() for p in self.pages)
+
+
+def pack_column(col: DeltaColumn) -> PackedPages:
+    """Build (or return the cached) column-wide packed-page arrays.
+
+    Pads miniblock metadata to ``page_size // MINIBLOCK`` and packed words
+    to the worst case (bw=32) -- exactly the layout the pac_decode kernels
+    tile over.
+    """
+    if col.packed_cache is not None \
+            and col.packed_cache.n_pages == len(col.pages):
+        return col.packed_cache
+    ps = col.page_size
+    n_mini = max(1, ps // MINIBLOCK)
+    max_words = ps  # worst case: 32-bit deltas -> one word per delta
+    n = len(col.pages)
+    first = np.zeros((n, 1), np.int32)
+    counts = np.zeros((n, 1), np.int32)
+    mind = np.zeros((n, n_mini), np.int32)
+    bw = np.zeros((n, n_mini), np.int32)
+    woff = np.zeros((n, n_mini), np.int32)
+    packed = np.zeros((n, max_words), np.uint32)
+    for i, pg in enumerate(col.pages):
+        first[i, 0] = pg.first_value
+        counts[i, 0] = pg.count
+        k = len(pg.min_deltas)
+        mind[i, :k] = pg.min_deltas
+        bw[i, :k] = pg.bit_widths
+        woff[i, :k] = pg.word_offsets
+        packed[i, :len(pg.packed)] = pg.packed
+    col.packed_cache = PackedPages(first, mind, bw, woff, packed, counts)
+    return col.packed_cache
 
 
 def delta_encode_column(values: np.ndarray,

@@ -1,4 +1,4 @@
-"""Neighbor retrieval (paper §4, Definitions 1-2).
+"""Neighbor retrieval (paper §4, Definitions 1-2) -- batched plane.
 
 Given vertex ``v``:
   1. the ``<offset>`` index gives the edge-row range ``[lo, hi)``;
@@ -9,6 +9,12 @@ Given vertex ``v``:
   4. property fetch touches only the pages with non-empty collections and
      selects within each page by bitmap (selection pushdown, §4.3).
 
+The unit of work is a **batch of vertices**, not a vertex:
+``retrieve_neighbors_batch`` performs one vectorized offsets gather, one
+page-deduplicated multi-range decode, and returns a merged (unioned) PAC;
+``k_hop`` expands whole frontiers with no per-vertex Python loop.  The
+single-vertex entry points remain as the batch-of-one special case.
+
 The decode step has three interchangeable engines:
   * ``numpy``  -- the storage-plane oracle (encoding.py),
   * ``jax``    -- jnp reference (kernels/pac_decode/ref.py),
@@ -17,13 +23,71 @@ The decode step has three interchangeable engines:
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
-
 import numpy as np
 
 from .edge import AdjacencyTable
 from .pac import PAC
+from .table import DeltaIntColumn
 from .vertex import VertexTable
+
+
+def _kernel_column(adj: AdjacencyTable):
+    col = adj.table[adj.value_col]
+    if not isinstance(col, DeltaIntColumn):
+        raise TypeError("kernel engines require a delta-encoded column")
+    return col.encoded
+
+
+def decode_edge_ranges(adj: AdjacencyTable, los, his, meter=None,
+                       engine: str = "numpy") -> np.ndarray:
+    """Concatenated neighbor IDs over many edge-row ranges (multiplicity
+    preserved), decoding the deduplicated page set once.
+
+    This is the shared multi-range primitive under every batched consumer
+    (IC-8 hop fan-out, BI-2 interval ranges, k-hop frontiers, serving).
+    """
+    if engine == "numpy":
+        return np.asarray(
+            adj.table[adj.value_col].read_rows_concat(los, his, meter),
+            np.int64)
+    from repro.kernels.pac_decode import ops as pac_ops
+    return pac_ops.decode_row_ranges(_kernel_column(adj), los, his,
+                                     meter=meter, engine=engine)
+
+
+def neighbor_ids_batch(adj: AdjacencyTable, vs, meter=None,
+                       engine: str = "numpy",
+                       unique: bool = True) -> np.ndarray:
+    """Neighbor IDs of a whole batch of vertices.
+
+    One vectorized offsets gather + one multi-range decode; duplicate
+    vertices in ``vs`` and empty adjacencies cost nothing extra.  With
+    ``unique`` the result is the sorted union; otherwise the concatenation
+    in ``vs`` order (multiplicity preserved).
+    """
+    los, his = adj.edge_ranges_batch(vs, meter)
+    ids = decode_edge_ranges(adj, los, his, meter, engine)
+    return np.unique(ids) if unique else ids
+
+
+def retrieve_neighbors_batch(adj: AdjacencyTable, vs,
+                             target_page_size: int,
+                             meter=None,
+                             engine: str = "numpy") -> PAC:
+    """Batched Definition 2: merged PAC of the neighbors of every ``v`` in
+    ``vs`` (equal to the union of the per-vertex PACs)."""
+    vs = np.asarray(vs, np.int64)
+    if vs.size == 0:
+        return PAC(target_page_size)
+    los, his = adj.edge_ranges_batch(vs, meter)
+    if engine == "numpy":
+        ids = decode_edge_ranges(adj, los, his, meter, engine)
+        if ids.size == 0:
+            return PAC(target_page_size)
+        return PAC.from_ids(np.unique(ids), target_page_size)
+    from repro.kernels.pac_decode import ops as pac_ops
+    return pac_ops.retrieve_pac_batch(_kernel_column(adj), los, his,
+                                      target_page_size, meter, engine=engine)
 
 
 def retrieve_neighbors(adj: AdjacencyTable, v: int,
@@ -41,12 +105,8 @@ def retrieve_neighbors(adj: AdjacencyTable, v: int,
     # kernel engines decode pages directly to bitmaps without materializing
     # the id list in HBM; they share the same metering (pages touched).
     from repro.kernels.pac_decode import ops as pac_ops
-    col = adj.table[adj.value_col]
-    from .table import DeltaIntColumn
-    if not isinstance(col, DeltaIntColumn):
-        raise TypeError("kernel engines require a delta-encoded column")
-    return pac_ops.retrieve_pac(col.encoded, lo, hi, target_page_size,
-                                meter=meter,
+    return pac_ops.retrieve_pac(_kernel_column(adj), lo, hi,
+                                target_page_size, meter=meter,
                                 use_pallas=(engine == "pallas"))
 
 
@@ -59,7 +119,11 @@ def retrieve_neighbors_scan(adj: AdjacencyTable, v: int,
 
 def fetch_properties(pac: PAC, vt: VertexTable, prop: str,
                      meter=None) -> np.ndarray:
-    """Selection pushdown: fetch ``prop`` for exactly the PAC's IDs."""
+    """Selection pushdown: fetch ``prop`` for exactly the PAC's IDs.
+
+    Works unchanged over merged PACs: a page shared by many vertices of a
+    batch appears once in the page set and is fetched once.
+    """
     pages = pac.pages()
     page_vals = vt.read_property_pages(prop, pages, meter)
     return pac.select(page_vals)
@@ -73,22 +137,30 @@ def neighbor_properties(adj: AdjacencyTable, v: int, vt: VertexTable,
     return fetch_properties(pac, vt, prop, meter)
 
 
+def neighbor_properties_batch(adj: AdjacencyTable, vs, vt: VertexTable,
+                              prop: str, meter=None,
+                              engine: str = "numpy") -> np.ndarray:
+    """Batched §4.1 workflow: one retrieval + one pushdown fetch for the
+    whole batch's merged PAC (values in ascending neighbor-id order)."""
+    pac = retrieve_neighbors_batch(adj, vs, vt.page_size, meter, engine)
+    return fetch_properties(pac, vt, prop, meter)
+
+
 def k_hop(adj: AdjacencyTable, seeds: np.ndarray, hops: int,
-          meter=None) -> np.ndarray:
-    """Multi-hop expansion (IC-8-style traversals). Returns unique IDs."""
+          meter=None, engine: str = "numpy") -> np.ndarray:
+    """Multi-hop expansion (IC-8-style traversals). Returns unique IDs.
+
+    Whole-frontier: each hop is one batched retrieval over the current
+    frontier (vectorized offsets gather + page-deduplicated decode), not a
+    Python loop over vertices."""
     frontier = np.unique(np.asarray(seeds, np.int64))
     seen = frontier
     for _ in range(hops):
-        nxt: List[np.ndarray] = []
-        for v in frontier:
-            nxt.append(adj.neighbor_ids(int(v), meter))
-        if not nxt:
-            break
-        frontier = np.setdiff1d(np.unique(np.concatenate(nxt)), seen,
-                                assume_unique=True)
-        seen = np.union1d(seen, frontier)
         if frontier.size == 0:
             break
+        nbrs = neighbor_ids_batch(adj, frontier, meter, engine=engine)
+        frontier = np.setdiff1d(nbrs, seen, assume_unique=True)
+        seen = np.union1d(seen, frontier)
     return seen
 
 

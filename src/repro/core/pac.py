@@ -25,6 +25,18 @@ def words_per_page(page_size: int) -> int:
     return -(-page_size // 32)
 
 
+def pages_union(pacs: Iterable["PAC"]) -> List[int]:
+    """Sorted page set touched by any of several PACs (multi-PAC -> pages).
+
+    The page list drives property-fetch pushdown for a whole batch: pages
+    shared by several collections are fetched once.
+    """
+    pages: set = set()
+    for pac in pacs:
+        pages.update(pac.bitmaps)
+    return sorted(pages)
+
+
 def ids_to_bitmap(ids: np.ndarray, base: int, page_size: int) -> np.ndarray:
     """Bitmap for one page: ids must lie in [base, base + page_size)."""
     rel = np.asarray(ids, np.int64) - base
@@ -122,6 +134,25 @@ class PAC:
                 out.bitmaps[p] = w
         return out
 
+    def union_(self, other: "PAC") -> "PAC":
+        """In-place union (merge): OR ``other`` into this PAC."""
+        assert self.page_size == other.page_size
+        for p, b in other.bitmaps.items():
+            a = self.bitmaps.get(p)
+            self.bitmaps[p] = b.copy() if a is None else (a | b)
+        return self
+
+    @classmethod
+    def union_all(cls, pacs: Iterable["PAC"],
+                  page_size: int = DEFAULT_PAGE_SIZE) -> "PAC":
+        """Merged PAC of many per-vertex PACs (batched retrieval result)."""
+        out = None
+        for pac in pacs:
+            if out is None:
+                out = cls(pac.page_size)
+            out.union_(pac)
+        return out if out is not None else cls(page_size)
+
     # -- accessors ------------------------------------------------------------
     def pages(self) -> List[int]:
         return sorted(self.bitmaps)
@@ -146,6 +177,17 @@ class PAC:
 
     def __len__(self) -> int:
         return len(self.bitmaps)
+
+    def __eq__(self, other) -> bool:
+        if not isinstance(other, PAC) or self.page_size != other.page_size:
+            return NotImplemented
+        if self.bitmaps.keys() != other.bitmaps.keys():
+            return False
+        return all(np.array_equal(w, other.bitmaps[p])
+                   for p, w in self.bitmaps.items())
+
+    # mutable value semantics: equality by content, deliberately unhashable
+    __hash__ = None
 
     def __repr__(self) -> str:
         return (f"PAC(pages={len(self.bitmaps)}, ids={self.count()}, "

@@ -29,7 +29,8 @@ from . import acero
 from .builder import Graph, GraphArBuilder
 from .edge import BY_DST, BY_SRC, ENC_PLAIN, build_adjacency
 from .labels import L, filter_rle_interval, intervals_to_pac
-from .neighbor import fetch_properties, retrieve_neighbors
+from .neighbor import (decode_edge_ranges, fetch_properties,
+                       retrieve_neighbors, retrieve_neighbors_batch)
 from .pac import PAC
 from .schema import EdgeTypeSchema, PropertySchema, VertexTypeSchema
 from .storage import IOMeter
@@ -140,15 +141,16 @@ def build_snb_baseline(snb, page_size: int = 2048) -> SnbBaseline:
 # IS-3: friends of a person with friendship creationDate, newest first
 # --------------------------------------------------------------------------
 
-def is3_graphar(g: Graph, person: int, meter: Optional[IOMeter] = None
-                ) -> Tuple[np.ndarray, np.ndarray]:
+def is3_graphar(g: Graph, person: int, meter: Optional[IOMeter] = None,
+                engine: str = "numpy") -> Tuple[np.ndarray, np.ndarray]:
     adj = g.adjacency("person-knows-person", BY_SRC)
     vt = g.vertex("person")
-    lo, hi = adj.edge_range(person, meter)
-    friends = np.asarray(adj.table["<dst>"].read_range(lo, hi, meter),
-                         np.int64)
-    dates = np.asarray(adj.table["creationDate"].read_range(lo, hi, meter),
-                       np.int64)
+    # batch-of-one through the shared batched plane
+    los, his = adj.edge_ranges_batch(np.array([person]), meter)
+    friends = decode_edge_ranges(adj, los, his, meter, engine)
+    dates = np.asarray(
+        adj.table["creationDate"].read_rows_concat(los, his, meter),
+        np.int64)
     # bitmap-pushdown fetch of friend names (order restored by id below)
     pac = PAC.from_ids(friends, vt.page_size)
     _ = fetch_properties(pac, vt, "firstName", meter)
@@ -176,35 +178,26 @@ def is3_acero(b: SnbBaseline, person: int,
 # --------------------------------------------------------------------------
 
 def ic8_graphar(g: Graph, person: int, limit: int = 20,
-                meter: Optional[IOMeter] = None
-                ) -> Tuple[np.ndarray, np.ndarray]:
+                meter: Optional[IOMeter] = None,
+                engine: str = "numpy") -> Tuple[np.ndarray, np.ndarray]:
     # hop 1: messages created by person  (hasCreator, incoming = by_dst)
     created = g.adjacency("message-hasCreator-person", BY_DST) \
         .neighbor_ids(person, meter)
-    # hop 2: replies to those messages (replyOf, incoming = by_dst),
-    # vectorized: one offsets read + page-dedup multi-range decode
+    # hop 2: replies to those messages (replyOf, incoming = by_dst) as one
+    # batched retrieval: vectorized offsets gather + page-deduplicated
+    # multi-range decode -> merged PAC over the message table's pages
     reply_adj = g.adjacency("message-replyOf-message", BY_DST)
-    if created.size:
-        off_col = reply_adj.offsets["<offset>"]
-        los = np.asarray(off_col.read_rows_concat(created, created + 1,
-                                                  meter), np.int64)
-        his = np.asarray(off_col.read_rows_concat(created + 1, created + 2,
-                                                  meter), np.int64)
-        replies = np.unique(np.asarray(
-            reply_adj.table["<src>"].read_rows_concat(los, his, meter),
-            np.int64))
-    else:
-        replies = np.zeros(0, np.int64)
+    vt = g.vertex("message")
+    pac = retrieve_neighbors_batch(reply_adj, created, vt.page_size, meter,
+                                   engine)
+    replies = pac.to_ids()
     if replies.size == 0:
         return replies, replies
     # fetch reply creationDate via PAC pushdown; top-`limit` newest
-    vt = g.vertex("message")
-    pac = PAC.from_ids(replies, vt.page_size)
     dates = np.asarray(fetch_properties(pac, vt, "creationDate", meter),
                        np.int64)
-    ids = pac.to_ids()
-    order = np.lexsort((-ids, -dates))[:limit]
-    return ids[order], dates[order]
+    order = np.lexsort((-replies, -dates))[:limit]
+    return replies[order], dates[order]
 
 
 def ic8_acero(b: SnbBaseline, person: int, limit: int = 20,
@@ -229,8 +222,8 @@ def ic8_acero(b: SnbBaseline, person: int, limit: int = 20,
 # --------------------------------------------------------------------------
 
 def bi2_graphar(g: Graph, tagclass: str,
-                meter: Optional[IOMeter] = None
-                ) -> Dict[int, int]:
+                meter: Optional[IOMeter] = None,
+                engine: str = "numpy") -> Dict[int, int]:
     msg_vt = g.vertex("message")
     # interval label filter: messages labeled with the tag class
     iv = filter_rle_interval(msg_vt, L(tagclass), meter)
@@ -241,13 +234,13 @@ def bi2_graphar(g: Graph, tagclass: str,
     tag_classes = np.asarray(tag_vt.table["tagclass"].read_all(meter))
     if starts.size == 0:
         return {}
-    # intervals of sorted messages -> contiguous edge-row ranges: one
-    # sequential read of the (small) offset column yields all bounds.
-    off = np.asarray(adj.offsets["<offset>"].read_all(meter), np.int64)
-    los, his = off[starts], off[ends]
-    # vectorized page-deduplicated decode of the delta-encoded <dst> column
-    tags = np.asarray(
-        adj.table["<dst>"].read_rows_concat(los, his, meter), np.int64)
+    # intervals of sorted messages -> contiguous edge-row ranges via one
+    # deduplicated gather of the <offset> column; the ranges then flow
+    # through the shared multi-range decode (multiplicity preserved --
+    # BI-2 counts edges, so no PAC/set collapse here).
+    bounds = adj.offsets_at(np.concatenate([starts, ends]), meter)
+    los, his = bounds[:starts.size], bounds[starts.size:]
+    tags = decode_edge_ranges(adj, los, his, meter, engine)
     tags = tags[tag_classes[tags] == cls_id]
     keys, cnts = np.unique(tags, return_counts=True)
     return {int(t): int(c) for t, c in zip(keys, cnts)}

@@ -1,51 +1,57 @@
-"""Jit'd wrappers + storage-plane integration for pac_decode kernels."""
+"""Jit'd wrappers + storage-plane integration for pac_decode kernels.
+
+Two granularities:
+
+* single-range (``retrieve_pac``): the original Definition-2 path for one
+  vertex's edge rows;
+* batched (``decode_row_ranges`` / ``retrieve_pac_batch``): an arbitrary
+  set of row ranges decoded through **one** kernel dispatch over the
+  page-deduplicated page set -- the unit of work of the batched
+  neighbor-retrieval plane (whole-frontier expansion, IC-8/BI-2 multi-hop,
+  per-tick serving retrieval).
+
+Both paths read pages through the cached column-wide packed representation
+(:func:`repro.core.encoding.pack_column`), so the VMEM-layout batch arrays
+are materialized once per column instead of once per query.
+"""
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Sequence, Tuple
 
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.encoding import DEFAULT_PAGE_SIZE, MINIBLOCK, DeltaColumn
+from repro.core.encoding import DeltaColumn, delta_decode_page, pack_column
 from repro.core.pac import PAC
 
 from . import kernel as K
 from . import ref as R
+
+ENGINES = ("numpy", "jax", "pallas")
 
 
 def _next_multiple(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
+def _next_pow2(x: int) -> int:
+    return 1 << max(x - 1, 0).bit_length()
+
+
 def pack_pages(col: DeltaColumn, p0: int, p1: int
                ) -> Tuple[np.ndarray, ...]:
-    """Stack pages [p0, p1) of a DeltaColumn into fixed-shape batch arrays.
+    """Views of pages [p0, p1) of the cached packed representation.
 
-    Pads miniblock metadata to ``page_size // MINIBLOCK`` and packed words
-    to the worst case (bw=32).  This is exactly the VMEM layout the kernel
-    tiles over.
+    Kept for API compatibility; the batch arrays are no longer rebuilt per
+    call -- they are zero-copy slices of :func:`pack_column`'s cache.
     """
-    ps = col.page_size
-    n_mini = ps // MINIBLOCK
-    max_words = ps  # worst case: 32-bit deltas -> one word per delta
-    pages = col.pages[p0:p1]
-    n = len(pages)
-    first = np.zeros((n, 1), np.int32)
-    counts = np.zeros((n, 1), np.int32)
-    mind = np.zeros((n, n_mini), np.int32)
-    bw = np.zeros((n, n_mini), np.int32)
-    woff = np.zeros((n, n_mini), np.int32)
-    packed = np.zeros((n, max_words), np.uint32)
-    for i, pg in enumerate(pages):
-        first[i, 0] = pg.first_value
-        counts[i, 0] = pg.count
-        k = len(pg.min_deltas)
-        mind[i, :k] = pg.min_deltas
-        bw[i, :k] = pg.bit_widths
-        woff[i, :k] = pg.word_offsets
-        packed[i, :len(pg.packed)] = pg.packed
-    return first, mind, bw, woff, packed, counts
+    return pack_column(col).slice(p0, p1)
+
+
+def pack_page_list(col: DeltaColumn, pages: Sequence[int]
+                   ) -> Tuple[np.ndarray, ...]:
+    """Row-gather of an arbitrary (sorted, deduplicated) page list."""
+    return pack_column(col).gather(pages)
 
 
 def decode_pages(col: DeltaColumn, p0: int, p1: int,
@@ -64,6 +70,109 @@ def decode_pages(col: DeltaColumn, p0: int, p1: int,
     return np.concatenate([ids[i, :counts[i]] for i in range(len(counts))])
 
 
+def decode_page_list(col: DeltaColumn, pages: Sequence[int],
+                     engine: str = "pallas") -> np.ndarray:
+    """Decode an arbitrary page list with one dispatch.
+
+    Returns ``int64[len(pages), page_size]``; rows are zero-padded past
+    each page's count (callers only index positions < count).  The page
+    batch is padded to a power of two before the jax/pallas dispatch so
+    the jitted kernels retrace O(log n) times, not once per distinct
+    frontier size.
+    """
+    ps = col.page_size
+    n = len(pages)
+    if engine == "numpy":
+        out = np.zeros((n, ps), np.int64)
+        for i, p in enumerate(pages):
+            d = delta_decode_page(col.pages[p])
+            out[i, :len(d)] = d
+        return out
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; want one of {ENGINES}")
+    args = pack_page_list(col, pages)
+    pad = _next_pow2(n) - n
+    if pad:
+        args = tuple(np.concatenate(
+            [a, np.zeros((pad,) + a.shape[1:], a.dtype)]) for a in args)
+    jargs = [jnp.asarray(a) for a in args]
+    if engine == "pallas":
+        ids = K.delta_decode_pallas(*jargs, page_size=ps)
+    else:
+        ids = R.decode_pages_ref(*jargs, page_size=ps)
+    ids = np.asarray(ids[:n], np.int64)
+    # zero out the padded tail of each page so all engines agree bit-exactly
+    counts = args[5][:n, 0]
+    cols = np.arange(ps)[None, :]
+    return np.where(cols < counts[:, None], ids, 0)
+
+
+# --------------------------------------------------------------------------
+# batched multi-range decode (the batched retrieval plane's kernel entry)
+# --------------------------------------------------------------------------
+
+def page_set_for_ranges(los: np.ndarray, his: np.ndarray, page_size: int
+                        ) -> Tuple[np.ndarray, int]:
+    """(sorted unique pages, contiguous-run count) touched by the ranges.
+
+    The run count models the read requests a real reader would issue:
+    consecutive pages coalesce into one ranged GET.
+    """
+    los = np.asarray(los, np.int64)
+    his = np.asarray(his, np.int64)
+    keep = his > los
+    if not keep.any():
+        return np.zeros(0, np.int64), 0
+    p0 = los[keep] // page_size
+    p1 = his[keep] // page_size + ((his[keep] % page_size) != 0) - 1
+    counts = p1 - p0 + 1
+    total = int(counts.sum())
+    within = np.arange(total) - np.repeat(np.cumsum(counts) - counts, counts)
+    pages = np.unique(np.repeat(p0, counts) + within)
+    runs = 1 + int(np.sum(np.diff(pages) > 1))
+    return pages, runs
+
+
+def decode_row_ranges(col: DeltaColumn, los, his, meter=None,
+                      engine: str = "pallas") -> np.ndarray:
+    """Concatenated rows over many [lo, hi) ranges, one decode dispatch.
+
+    The deduplicated page set is decoded **once** (numpy / jnp ref /
+    Pallas kernel -- same IOMeter accounting for all three: each touched
+    page's bytes charged once, requests counted per contiguous page run),
+    then every output element is gathered from the decoded page matrix.
+    """
+    los = np.asarray(los, np.int64)
+    his = np.asarray(his, np.int64)
+    lengths = np.maximum(his - los, 0)
+    total = int(lengths.sum())
+    if total == 0:
+        return np.zeros(0, np.int64)
+    ps = col.page_size
+    pages, runs = page_set_for_ranges(los, his, ps)
+    if meter is not None:
+        meter.record(sum(col.pages[int(p)].nbytes() for p in pages), runs)
+    mat = decode_page_list(col, pages, engine)
+    # absolute row index of every output element
+    keep = lengths > 0
+    l = los[keep]
+    k = lengths[keep]
+    within = np.arange(total) - np.repeat(np.cumsum(k) - k, k)
+    rows = np.repeat(l, k) + within
+    page_of = rows // ps
+    pidx = np.searchsorted(pages, page_of)
+    return mat[pidx, rows - page_of * ps]
+
+
+def retrieve_pac_batch(col: DeltaColumn, los, his, target_page_size: int,
+                       meter=None, engine: str = "pallas") -> PAC:
+    """Batched Definition 2: many row ranges -> one merged (unioned) PAC."""
+    ids = decode_row_ranges(col, los, his, meter, engine)
+    if ids.size == 0:
+        return PAC(target_page_size)
+    return PAC.from_ids(np.unique(ids), target_page_size)
+
+
 def retrieve_pac(col: DeltaColumn, lo: int, hi: int, target_page_size: int,
                  meter=None, use_pallas: bool = True) -> PAC:
     """Kernel-engine neighbor retrieval: rows [lo, hi) -> PAC.
@@ -71,15 +180,9 @@ def retrieve_pac(col: DeltaColumn, lo: int, hi: int, target_page_size: int,
     Charges the same page bytes as the numpy path (the I/O plane is
     identical; only the decode compute engine differs).
     """
-    if hi <= lo:
-        return PAC(target_page_size)
-    ps = col.page_size
-    p0, p1 = lo // ps, (hi - 1) // ps + 1
-    if meter is not None:
-        meter.record(sum(col.pages[p].nbytes() for p in range(p0, p1)), 1)
-    flat = decode_pages(col, p0, p1, use_pallas)
-    ids = flat[lo - p0 * ps: hi - p0 * ps]
-    return PAC.from_ids(ids, target_page_size)
+    return retrieve_pac_batch(col, np.array([lo]), np.array([hi]),
+                              target_page_size, meter,
+                              engine=("pallas" if use_pallas else "jax"))
 
 
 def decode_range_to_bitmap(col: DeltaColumn, lo: int, hi: int,

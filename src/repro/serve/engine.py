@@ -7,8 +7,10 @@ slots decode together with one batched ``decode_step`` per tick.  Finished
 slots (EOS or max_tokens) are retired and immediately refilled from the
 queue -- decode utilization stays high without dynamic shapes.
 
-Retrieval-augmented requests pull context passages from the GraphAr lake
-via neighbor retrieval before tokenization (``context_fn``).
+Retrieval-augmented requests name a ``context_vertex`` in the lake; the
+engine gathers context for **all** requests admitted in a tick via one
+batched neighbor retrieval (``context_fn``, e.g.
+:class:`repro.serve.retrieval.GraphRetriever`) before prefill.
 """
 from __future__ import annotations
 
@@ -30,21 +32,27 @@ class Request:
     prompt: np.ndarray                 # int32 tokens
     max_new_tokens: int = 32
     temperature: float = 0.0
+    context_vertex: Optional[int] = None   # RAG seed vertex in the lake
     # filled by the engine
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    context_tokens: int = 0            # context appended by the engine
 
 
 class ServeEngine:
     def __init__(self, model: LM, params, max_slots: int = 4,
-                 max_len: int = 512, eos_id: int = 2, seed: int = 0):
+                 max_len: int = 512, eos_id: int = 2, seed: int = 0,
+                 context_fn: Optional[
+                     Callable[[np.ndarray], List[np.ndarray]]] = None):
         self.model = model
         self.params = params
         self.max_slots = max_slots
         self.max_len = max_len
         self.eos_id = eos_id
+        self.context_fn = context_fn
         self.queue: deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * max_slots
+        self.finished: List[Request] = []
         # per-slot positions (vector index): slots advance independently
         self.cache = model.init_cache(max_slots, max_len,
                                       dtype=jnp.float32, vector_index=True)
@@ -57,12 +65,32 @@ class ServeEngine:
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
+    def _attach_context(self, admitted: List[Request]) -> None:
+        """One batched lake retrieval for every admitted request's seed."""
+        need = [r for r in admitted if r.context_vertex is not None]
+        if not need or self.context_fn is None:
+            return
+        contexts = self.context_fn(
+            np.asarray([r.context_vertex for r in need], np.int64))
+        for req, ctx in zip(need, contexts):
+            ctx = np.asarray(ctx, np.int32)
+            # leave room for generation within the slot's cache rows
+            budget = self.max_len - 1 - req.max_new_tokens - len(req.prompt)
+            ctx = ctx[:max(budget, 0)]
+            if ctx.size:
+                req.prompt = np.concatenate(
+                    [np.asarray(req.prompt, np.int32), ctx])
+                req.context_tokens = int(ctx.size)
+
     def _admit(self) -> None:
-        for slot in range(self.max_slots):
-            if self.slots[slot] is None and self.queue:
-                req = self.queue.popleft()
-                self._prefill_slot(slot, req)
-                self.slots[slot] = req
+        free = [i for i in range(self.max_slots) if self.slots[i] is None]
+        admitted: List[tuple] = []
+        while free and self.queue:
+            admitted.append((free.pop(0), self.queue.popleft()))
+        self._attach_context([r for _, r in admitted])
+        for slot, req in admitted:
+            self._prefill_slot(slot, req)
+            self.slots[slot] = req
 
     def _prefill_slot(self, slot: int, req: Request) -> None:
         """Per-slot prefill: runs the prompt through the model and writes
@@ -136,16 +164,16 @@ class ServeEngine:
     def _retire(self) -> None:
         for i, req in enumerate(self.slots):
             if req is not None and req.done:
+                self.finished.append(req)
                 self.slots[i] = None
                 self.slot_pos[i] = 0
 
     def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
-        finished: List[Request] = []
-        seen = set()
+        """Tick until queue and slots are empty; returns the requests
+        retired during this call (in retirement order)."""
+        start = len(self.finished)
         for _ in range(max_ticks):
             self.step()
-            for req in list(self.queue) + list(self.slots):
-                pass
             if not self.queue and all(s is None for s in self.slots):
                 break
-        return finished
+        return self.finished[start:]

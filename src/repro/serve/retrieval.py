@@ -1,0 +1,63 @@
+"""Batched RAG context retrieval from a GraphAr lake.
+
+The serving engine admits several requests per tick; each may name a seed
+vertex whose neighborhood provides context passages.  A
+:class:`GraphRetriever` turns the whole admitted batch into **one** batched
+neighbor retrieval (vectorized offsets gather + page-deduplicated decode)
+plus one batched token fetch -- the per-tick unit of work of the batched
+retrieval plane, instead of a per-request Python loop over the lake.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.edge import AdjacencyTable
+from repro.core.neighbor import decode_edge_ranges
+from repro.core.table import TokensColumn
+
+
+class GraphRetriever:
+    """Callable ``vs -> per-request context token arrays``.
+
+    Per call (= per engine tick): one vectorized offsets gather over all
+    seed vertices, one multi-range decode of the adjacency value column
+    (pages shared between requests fetched once), one batched read of the
+    neighbors' token lists, then a cheap per-request assembly.
+    """
+
+    def __init__(self, adj: AdjacencyTable, tokens_col: TokensColumn,
+                 max_neighbors: int = 2, tokens_per_neighbor: int = 16,
+                 meter=None, engine: str = "numpy"):
+        self.adj = adj
+        self.tokens_col = tokens_col
+        self.max_neighbors = max_neighbors
+        self.tokens_per_neighbor = tokens_per_neighbor
+        self.meter = meter
+        self.engine = engine
+        self.calls = 0          # batched retrievals issued (one per tick)
+        self.vertices_seen = 0  # requests served across all calls
+
+    def __call__(self, vs: np.ndarray) -> List[np.ndarray]:
+        vs = np.asarray(vs, np.int64)
+        self.calls += 1
+        self.vertices_seen += int(vs.size)
+        if vs.size == 0:
+            return []
+        los, his = self.adj.edge_ranges_batch(vs, self.meter)
+        his = np.minimum(his, los + self.max_neighbors)
+        nbrs = decode_edge_ranges(self.adj, los, his, self.meter,
+                                  self.engine)
+        lengths = np.maximum(his - los, 0)
+        token_lists = self.tokens_col.read_rows(nbrs, self.meter) \
+            if nbrs.size else []
+        out: List[np.ndarray] = []
+        pos = 0
+        for k in lengths:
+            parts = [np.asarray(t[:self.tokens_per_neighbor], np.int32)
+                     for t in token_lists[pos:pos + int(k)]]
+            pos += int(k)
+            out.append(np.concatenate(parts) if parts
+                       else np.zeros(0, np.int32))
+        return out

@@ -1,0 +1,150 @@
+"""Batched neighbor-retrieval plane: equivalence, I/O accounting, caching."""
+import numpy as np
+import pytest
+
+from repro.core import (BY_SRC, ENC_GRAPHAR, IOMeter, PAC, build_adjacency,
+                        k_hop, neighbor_ids_batch, neighbor_properties_batch,
+                        pack_column, pages_union, retrieve_neighbors,
+                        retrieve_neighbors_batch)
+from repro.core.neighbor import decode_edge_ranges, fetch_properties
+from repro.core.table import DeltaIntColumn
+from repro.core.vertex import VertexTable
+from repro.core.schema import PropertySchema, VertexTypeSchema
+from repro.data.synthetic import powerlaw_graph
+from repro.kernels.pac_decode import ops as pdo
+
+ENGINES = ["numpy", "jax", "pallas"]
+N = 2000
+PAGE = 256
+
+
+@pytest.fixture(scope="module")
+def adj():
+    src, dst = powerlaw_graph(N, 6, seed=3)
+    # N + 8 key vertices: the tail ids have empty adjacency by construction
+    return build_adjacency(src, dst, N + 8, N, BY_SRC, ENC_GRAPHAR,
+                           page_size=PAGE)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    rng = np.random.default_rng(7)
+    vs = rng.integers(0, N, 48)
+    # duplicates + guaranteed-empty adjacency vertices in the batch
+    return np.concatenate([vs, vs[:7], np.arange(N, N + 8)])
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_batch_equals_pervertex_union(adj, batch, engine):
+    got = retrieve_neighbors_batch(adj, batch, 512, engine=engine)
+    want = PAC.union_all(
+        [retrieve_neighbors(adj, int(v), 512) for v in batch], 512)
+    assert got == want
+    np.testing.assert_array_equal(got.to_ids(), want.to_ids())
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_decode_edge_ranges_multiplicity(adj, batch, engine):
+    los, his = adj.edge_ranges_batch(batch)
+    got = decode_edge_ranges(adj, los, his, engine=engine)
+    want = np.concatenate(
+        [adj.neighbor_ids(int(v)) for v in batch] or
+        [np.zeros(0, np.int64)])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_empty_and_singleton_batches(adj):
+    assert retrieve_neighbors_batch(adj, np.zeros(0, np.int64), 512) \
+        .count() == 0
+    assert neighbor_ids_batch(adj, np.zeros(0, np.int64)).size == 0
+    # batch of only empty-adjacency vertices
+    empty = retrieve_neighbors_batch(adj, np.arange(N, N + 8), 512)
+    assert empty.count() == 0 and len(empty) == 0
+
+
+def test_edge_ranges_batch_matches_scalar(adj, batch):
+    los, his = adj.edge_ranges_batch(batch)
+    for v, lo, hi in zip(batch, los, his):
+        assert (int(lo), int(hi)) == adj.edge_range(int(v))
+
+
+def test_batched_io_leq_loop_sum(adj, batch):
+    m_batch, m_loop = IOMeter(), IOMeter()
+    retrieve_neighbors_batch(adj, batch, 512, m_batch)
+    for v in batch:
+        retrieve_neighbors(adj, int(v), 512, m_loop)
+    assert m_batch.nbytes <= m_loop.nbytes
+    assert m_batch.nrequests <= m_loop.nrequests
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_kernel_engines_meter_like_numpy(adj, batch, engine):
+    m = IOMeter()
+    retrieve_neighbors_batch(adj, batch, 512, m, engine=engine)
+    m0 = IOMeter()
+    retrieve_neighbors_batch(adj, batch, 512, m0, engine="numpy")
+    assert (m.nbytes, m.nrequests) == (m0.nbytes, m0.nrequests)
+
+
+def test_khop_whole_frontier_matches_bruteforce(adj):
+    src, dst = powerlaw_graph(N, 6, seed=3)
+    seeds = np.array([1, 5, 9])
+
+    def brute(hops):
+        seen = set(int(s) for s in seeds)
+        frontier = set(seen)
+        for _ in range(hops):
+            nxt = set()
+            for v in frontier:
+                nxt.update(dst[src == v].tolist())
+            frontier = nxt - seen
+            seen |= frontier
+        return np.array(sorted(seen), np.int64)
+
+    for hops in (1, 2, 3):
+        np.testing.assert_array_equal(k_hop(adj, seeds, hops), brute(hops))
+
+
+def test_pack_pages_cached_no_rematerialization(adj):
+    col: DeltaIntColumn = adj.table["<dst>"]
+    enc = col.encoded
+    enc.packed_cache = None  # force a cold start
+    a = pdo.pack_pages(enc, 0, len(enc.pages))
+    cache = enc.packed_cache
+    assert cache is not None
+    b = pdo.pack_pages(enc, 0, len(enc.pages))
+    # repeated queries reuse the same backing arrays: views, not copies
+    for x, y in zip(a, b):
+        assert np.shares_memory(x, y)
+    assert np.shares_memory(b[4], cache.packed)
+    assert pack_column(enc) is cache
+
+
+def test_pac_union_all_and_pages_union():
+    a = PAC.from_ids(np.array([1, 2, 700]), 512)
+    b = PAC.from_ids(np.array([2, 3, 1500]), 512)
+    c = PAC(512)
+    u = PAC.union_all([a, b, c], 512)
+    np.testing.assert_array_equal(u.to_ids(), [1, 2, 3, 700, 1500])
+    assert pages_union([a, b, c]) == [0, 1, 2]
+    assert PAC.union_all([], 512).count() == 0
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_fetch_properties_over_merged_pac(adj, batch, engine):
+    vals = np.arange(N, dtype=np.int64) * 3 + 1
+    vt = VertexTable.build(
+        VertexTypeSchema("t", [PropertySchema("x", "int64")],
+                         page_size=512),
+        {"x": vals})
+    got = neighbor_properties_batch(adj, batch, vt, "x", engine=engine)
+    ids = neighbor_ids_batch(adj, batch)
+    np.testing.assert_array_equal(got, vals[ids])
+    # pages fetched once for the whole batch
+    m_batch, m_loop = IOMeter(), IOMeter()
+    pac = retrieve_neighbors_batch(adj, batch, vt.page_size)
+    fetch_properties(pac, vt, "x", m_batch)
+    for v in batch:
+        fetch_properties(retrieve_neighbors(adj, int(v), vt.page_size),
+                         vt, "x", m_loop)
+    assert m_batch.nbytes <= m_loop.nbytes

@@ -3,8 +3,7 @@ import os
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core import (PAC, BoolRleColumn, DeltaIntColumn, GraphStore,
                         IOMeter, PlainColumn, StringColumn, Table,

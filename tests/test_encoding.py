@@ -1,8 +1,7 @@
 """Codec round-trip + property tests (paper §4.2/§5.1 encodings)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core.encoding import (ALLOWED_WIDTHS, DEFAULT_PAGE_SIZE, MINIBLOCK,
                                  bitpack, bitunpack, delta_decode_column,

@@ -1,8 +1,7 @@
 """Graph-level behaviour: builder, neighbor retrieval, label filtering."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core import (BY_DST, BY_SRC, ENC_GRAPHAR, ENC_OFFSET, ENC_PLAIN,
                         EdgeTypeSchema, GraphArBuilder, GraphSchema, IOMeter,

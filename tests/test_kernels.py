@@ -3,8 +3,7 @@ cross-checks against the numpy storage-plane codecs."""
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core.encoding import (delta_decode_column, delta_encode_column,
                                  rle_encode_bool)

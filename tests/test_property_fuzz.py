@@ -1,8 +1,7 @@
 """Property-based fuzzing of the storage plane invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core import (BY_SRC, ENC_GRAPHAR, DeltaIntColumn, IOMeter,
                         PlainColumn, Table, build_adjacency)
