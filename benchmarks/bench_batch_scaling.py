@@ -1,27 +1,42 @@
 """Batch-size scaling of the batched retrieval plane.
 
-For batch = 1/8/64/512 vertices, compares one ``retrieve_neighbors_batch``
-call (vectorized offsets gather + page-deduplicated decode + merged PAC)
-against the per-vertex ``retrieve_neighbors`` Python loop, across all
-three decode engines.  Also reports the I/O plane's view (bytes/requests
-saved by page dedup) and the packed-page cache effect on the kernel
-engines' hot path.
+Four sections:
+
+* packed-page cache: cold build vs hot reuse of the column-wide batch
+  arrays (``pack_column``);
+* loop vs batch: one ``retrieve_neighbors_batch`` call against the
+  per-vertex ``retrieve_neighbors`` Python loop, across all engines, with
+  the I/O plane's view (bytes/requests saved by page dedup);
+* fused vs host (PR 2): the fused decode->bitmap kernel path against the
+  decode + ``PAC.from_ids`` host path on the jax/pallas engines, with the
+  IOMeter cross-checked against the numpy engine (identical by
+  construction -- the row asserts it);
+* cold vs warm decoded-page LRU (PR 2): repeated serving-tick retrievals
+  (``neighbor_ids_batch``) with the cache cleared each call vs pre-warmed.
+
+``REPRO_BENCH_SMOKE=1`` shrinks the graph and batch sizes so CI can run
+the whole file in seconds as a kernel-regression tripwire.
 """
 from __future__ import annotations
 
+import os
+
 import numpy as np
 
-from repro.core import (BY_SRC, ENC_GRAPHAR, IOMeter, build_adjacency,
-                        pack_column, retrieve_neighbors,
-                        retrieve_neighbors_batch)
+from repro.core import (BY_SRC, ENC_GRAPHAR, IOMeter, attach_page_cache,
+                        build_adjacency, neighbor_ids_batch, pack_column,
+                        retrieve_neighbors, retrieve_neighbors_batch)
 
 from .util import emit, timeit
 
-BATCH_SIZES = (1, 8, 64, 512)
+SMOKE = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+BATCH_SIZES = (1, 8) if SMOKE else (1, 8, 64, 512)
+KERNEL_BATCH_SIZES = (8,) if SMOKE else (8, 64, 512)
 ENGINES = ("numpy", "jax", "pallas")
-N = 20_000
+N = 2_000 if SMOKE else 20_000
 DEG = 8
-PAGE = 2048
+PAGE = 512 if SMOKE else 2048
+CACHE_PAGES = 256
 
 
 def run() -> None:
@@ -66,3 +81,54 @@ def run() -> None:
                  f"io_bytes_loop={m_loop.nbytes};"
                  f"io_reqs_batch={m_batch.nrequests};"
                  f"io_reqs_loop={m_loop.nrequests}")
+
+    # ---- fused decode->bitmap vs decode + PAC.from_ids host path ----------
+    for engine in ("jax", "pallas"):
+        for bs in KERNEL_BATCH_SIZES:
+            vs = np.random.default_rng(bs).integers(0, N, bs)
+            t_fused = timeit(
+                lambda: retrieve_neighbors_batch(adj, vs, PAGE,
+                                                 engine=engine, fused=True),
+                repeats=5)
+            t_host = timeit(
+                lambda: retrieve_neighbors_batch(adj, vs, PAGE,
+                                                 engine=engine, fused=False),
+                repeats=5)
+            m_fused, m_np = IOMeter(), IOMeter()
+            retrieve_neighbors_batch(adj, vs, PAGE, m_fused, engine,
+                                     fused=True)
+            retrieve_neighbors_batch(adj, vs, PAGE, m_np, "numpy")
+            assert (m_fused.nbytes, m_fused.nrequests) \
+                == (m_np.nbytes, m_np.nrequests), \
+                "fused path must charge exactly what the numpy engine does"
+            emit(f"batch_fused_{engine}_bs{bs}", t_fused,
+                 f"host_us={t_host:.2f};fused_over_host="
+                 f"{t_host / t_fused:.2f};io_bytes={m_fused.nbytes};"
+                 f"io_bytes_numpy={m_np.nbytes};io_identical=1")
+            emit(f"batch_host_{engine}_bs{bs}", t_host, "")
+
+    # ---- decoded-page LRU: cold vs warm serving ticks ---------------------
+    for engine in ENGINES:
+        for bs in KERNEL_BATCH_SIZES:
+            vs = np.random.default_rng(bs).integers(0, N, bs)
+            cache = attach_page_cache(col, CACHE_PAGES)
+
+            def cold_tick():
+                cache.clear()
+                neighbor_ids_batch(adj, vs, engine=engine)
+
+            t_cold = timeit(cold_tick, repeats=3)
+            neighbor_ids_batch(adj, vs, engine=engine)   # warm the cache
+            t_warm = timeit(
+                lambda: neighbor_ids_batch(adj, vs, engine=engine),
+                repeats=5)
+            m_cold, m_warm = IOMeter(), IOMeter()
+            cache.clear()
+            neighbor_ids_batch(adj, vs, m_cold, engine=engine)
+            neighbor_ids_batch(adj, vs, m_warm, engine=engine)
+            col.page_cache = None
+            emit(f"batch_lru_warm_{engine}_bs{bs}", t_warm,
+                 f"cold_us={t_cold:.2f};cold_over_warm="
+                 f"{t_cold / t_warm:.2f};io_bytes_cold={m_cold.nbytes};"
+                 f"io_bytes_warm={m_warm.nbytes}")
+            emit(f"batch_lru_cold_{engine}_bs{bs}", t_cold, "")

@@ -1,18 +1,21 @@
 """Benchmark harness: one module per paper table/figure.
 
-Emits ``name,us_per_call,derived`` CSV.  See EXPERIMENTS.md for the
+Emits ``name,us_per_call,derived`` CSV plus a machine-readable JSON
+(``suite -> name -> us_per_call``, default ``BENCH_PR2.json``) so the
+perf trajectory is tracked across PRs.  See EXPERIMENTS.md for the
 mapping to the paper's Figures 8-14 and Tables 2-3.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 from . import (bench_batch_scaling, bench_complex_filter, bench_e2e,
                bench_kernels, bench_label_scaling, bench_label_storage,
                bench_media, bench_neighbor, bench_pipeline,
                bench_simple_filter, bench_storage, bench_transform)
-from .util import header
+from .util import header, set_suite, write_json
 
 SUITES = {
     "fig8_storage": bench_storage.run,
@@ -34,13 +37,25 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names")
+    ap.add_argument("--json", default=None,
+                    help="machine-readable results path ('' to skip); "
+                         "defaults to BENCH_PR2.json, or bench_smoke.json "
+                         "under REPRO_BENCH_SMOKE so shrunk-workload rows "
+                         "never overwrite the tracked trajectory")
     args = ap.parse_args()
+    if args.json is None:
+        args.json = ("bench_smoke.json" if os.environ.get("REPRO_BENCH_SMOKE")
+                     else "BENCH_PR2.json")
     names = (args.only.split(",") if args.only else list(SUITES))
     header()
     t0 = time.perf_counter()
     for name in names:
+        set_suite(name)
         SUITES[name]()
     print(f"# total_wall_s={time.perf_counter()-t0:.1f}", flush=True)
+    if args.json:
+        write_json(args.json)
+        print(f"# wrote {args.json}", flush=True)
 
 
 if __name__ == '__main__':

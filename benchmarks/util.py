@@ -1,10 +1,22 @@
-"""Benchmark helpers: timing + CSV emission."""
+"""Benchmark helpers: timing + CSV/JSON emission."""
 from __future__ import annotations
 
+import json
 import time
 from typing import Callable, Dict, List, Optional
 
 ROWS: List[str] = []
+
+#: machine-readable mirror of the CSV: suite -> row name -> us_per_call
+RESULTS: Dict[str, Dict[str, float]] = {}
+_CURRENT_SUITE = "default"
+
+
+def set_suite(name: str) -> None:
+    """Route subsequent :func:`emit` rows to ``RESULTS[name]``."""
+    global _CURRENT_SUITE
+    _CURRENT_SUITE = name
+    RESULTS.setdefault(name, {})
 
 
 def timeit(fn: Callable, repeats: int = 5, warmup: int = 1) -> float:
@@ -23,7 +35,26 @@ def timeit(fn: Callable, repeats: int = 5, warmup: int = 1) -> float:
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     row = f"{name},{us_per_call:.2f},{derived}"
     ROWS.append(row)
+    RESULTS.setdefault(_CURRENT_SUITE, {})[name] = round(us_per_call, 2)
     print(row, flush=True)
+
+
+def write_json(path: str) -> None:
+    """Merge ``RESULTS`` (suite -> name -> us_per_call) into ``path``.
+
+    Suite-level merge with the existing file, so a partial ``--only`` run
+    refreshes just the suites it ran instead of clobbering the rest of
+    the tracked trajectory."""
+    merged: Dict[str, Dict[str, float]] = {}
+    try:
+        with open(path) as f:
+            merged = json.load(f)
+    except (OSError, ValueError):
+        pass
+    merged.update(RESULTS)
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=2, sort_keys=True)
+        f.write("\n")
 
 
 def header() -> None:

@@ -58,6 +58,8 @@ def main():
           f"steps; {retriever.calls} batched retrievals for "
           f"{retriever.vertices_seen} seeds ({ctx} context tokens, "
           f"{meter.nbytes} lake bytes)")
+    # cross-tick decoded-page LRU: warm ticks stop re-paying hot-page decode
+    print("retrieval stats:", eng.stats()["retrieval"])
 
 
 if __name__ == "__main__":

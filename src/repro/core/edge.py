@@ -36,6 +36,9 @@ class AdjacencyTable:
     offsets: Optional[Table]         # single '<offset>' PlainColumn table
     num_key_vertices: int
     encoding: str = ENC_GRAPHAR
+    #: size of the value-side vertex table -- the id space the fused
+    #: decode->bitmap kernel scatters over; None disables the fused path.
+    num_value_vertices: Optional[int] = None
 
     @property
     def num_edges(self) -> int:
@@ -157,6 +160,7 @@ def build_adjacency(src: np.ndarray, dst: np.ndarray,
     dst = np.asarray(dst, np.int64)
     n_edges = len(src)
     nkey = num_src if order == BY_SRC else num_dst
+    nval = num_dst if order == BY_SRC else num_src
 
     if encoding == ENC_PLAIN:
         t = Table(f"{name}_{order}_plain", n_edges, page_size)
@@ -164,7 +168,7 @@ def build_adjacency(src: np.ndarray, dst: np.ndarray,
         t.add(PlainColumn("<dst>", dst.astype(np.int32), page_size))
         for k, v in properties.items():
             t.add(PlainColumn(k, np.asarray(v), page_size))
-        return AdjacencyTable(order, t, None, nkey, encoding)
+        return AdjacencyTable(order, t, None, nkey, encoding, nval)
 
     perm, sorted_keys = sort_edges(src, dst, order)
     s, d = src[perm], dst[perm]
@@ -182,4 +186,4 @@ def build_adjacency(src: np.ndarray, dst: np.ndarray,
 
     ot = Table(f"{name}_{order}_offset", nkey + 1, page_size)
     ot.add(PlainColumn("<offset>", off, page_size))
-    return AdjacencyTable(order, t, ot, nkey, encoding)
+    return AdjacencyTable(order, t, ot, nkey, encoding, nval)

@@ -294,6 +294,11 @@ class DeltaColumn:
     #: lazily built by :func:`pack_column`; not part of the storage format.
     packed_cache: "PackedPages | None" = dataclasses.field(
         default=None, repr=False, compare=False)
+    #: optional decoded-page LRU (see :mod:`repro.core.page_cache`);
+    #: attached by :func:`repro.core.page_cache.attach_page_cache`, consulted
+    #: by every batched decode path, not part of the storage format.
+    page_cache: "object | None" = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def nbytes(self) -> int:
         return sum(p.nbytes() for p in self.pages)

@@ -167,11 +167,23 @@ def intervals_to_pac(iv: Intervals, n: int, page_size: int) -> PAC:
 
 
 def intervals_to_ids(iv: Intervals) -> np.ndarray:
-    starts, ends = iv
-    if starts.size == 0:
+    """Concatenated ids of half-open intervals, fully vectorized.
+
+    One repeat/cumsum construction instead of a Python loop of
+    ``np.arange`` per interval: element ``j`` of the output is
+    ``starts[i] + (j - offset[i])`` for its interval ``i``.
+    """
+    starts = np.asarray(iv[0], np.int64)
+    ends = np.asarray(iv[1], np.int64)
+    lengths = np.maximum(ends - starts, 0)
+    total = int(lengths.sum())
+    if total == 0:
         return np.zeros(0, np.int64)
-    return np.concatenate([np.arange(s, e, dtype=np.int64)
-                           for s, e in zip(starts, ends)])
+    keep = lengths > 0
+    s, k = starts[keep], lengths[keep]
+    within = np.arange(total, dtype=np.int64) \
+        - np.repeat(np.cumsum(k) - k, k)
+    return np.repeat(s, k) + within
 
 
 def intervals_count(iv: Intervals) -> int:

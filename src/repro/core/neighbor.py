@@ -73,10 +73,19 @@ def neighbor_ids_batch(adj: AdjacencyTable, vs, meter=None,
 def retrieve_neighbors_batch(adj: AdjacencyTable, vs,
                              target_page_size: int,
                              meter=None,
-                             engine: str = "numpy") -> PAC:
+                             engine: str = "numpy",
+                             fused: bool | None = None) -> PAC:
     """Batched Definition 2: merged PAC of the neighbors of every ``v`` in
-    ``vs`` (equal to the union of the per-vertex PACs)."""
+    ``vs`` (equal to the union of the per-vertex PACs).
+
+    On the kernel engines the merged PAC comes straight from the fused
+    decode->bitmap kernel (one dispatch, bitmap planes consumed via
+    ``PAC.from_dense_bitmap``) whenever the adjacency knows its value-side
+    vertex count; ``fused=False`` forces the decode + ``PAC.from_ids``
+    host path (the oracle)."""
     vs = np.asarray(vs, np.int64)
+    if engine == "numpy" and fused:
+        raise ValueError("fused path requires a kernel engine (jax/pallas)")
     if vs.size == 0:
         return PAC(target_page_size)
     los, his = adj.edge_ranges_batch(vs, meter)
@@ -87,7 +96,9 @@ def retrieve_neighbors_batch(adj: AdjacencyTable, vs,
         return PAC.from_ids(np.unique(ids), target_page_size)
     from repro.kernels.pac_decode import ops as pac_ops
     return pac_ops.retrieve_pac_batch(_kernel_column(adj), los, his,
-                                      target_page_size, meter, engine=engine)
+                                      target_page_size, meter, engine=engine,
+                                      num_targets=adj.num_value_vertices,
+                                      fused=fused)
 
 
 def retrieve_neighbors(adj: AdjacencyTable, v: int,

@@ -82,6 +82,48 @@ class PAC:
         return pac
 
     @classmethod
+    def from_bitmap_planes(cls, planes: np.ndarray,
+                           page_size: int = DEFAULT_PAGE_SIZE,
+                           pages: np.ndarray | None = None) -> "PAC":
+        """PAC from per-page bitmap planes (the fused kernels' output).
+
+        ``planes`` is ``uint32[n, words_per_page(page_size)]``; row ``i``
+        is the bitmap of page ``pages[i]`` (default: page ``i``).  Empty
+        planes are dropped -- the kernel writes the dense plane stack, the
+        PAC keeps only the sparse non-empty page set.
+        """
+        planes = np.ascontiguousarray(planes, np.uint32)
+        if planes.ndim != 2 or planes.shape[1] != words_per_page(page_size):
+            raise ValueError(
+                f"planes must be [n, {words_per_page(page_size)}] for "
+                f"page_size={page_size}, got {planes.shape}")
+        if pages is None:
+            pages = np.arange(planes.shape[0], dtype=np.int64)
+        nonempty = planes.any(axis=1)
+        pac = cls(page_size)
+        for p, plane in zip(np.asarray(pages, np.int64)[nonempty],
+                            planes[nonempty]):
+            pac.bitmaps[int(p)] = plane.copy()
+        return pac
+
+    @classmethod
+    def from_dense_bitmap(cls, words: np.ndarray,
+                          page_size: int = DEFAULT_PAGE_SIZE) -> "PAC":
+        """PAC from one dense bitmap over ``[0, 32 * len(words))``.
+
+        Requires ``page_size % 32 == 0`` so page boundaries fall on word
+        boundaries; the tail is zero-padded to a whole plane.
+        """
+        if page_size % 32:
+            raise ValueError("page_size must be a multiple of 32")
+        words = np.asarray(words, np.uint32)
+        wpp = words_per_page(page_size)
+        pad = (-len(words)) % wpp
+        if pad:
+            words = np.concatenate([words, np.zeros(pad, np.uint32)])
+        return cls.from_bitmap_planes(words.reshape(-1, wpp), page_size)
+
+    @classmethod
     def from_intervals(cls, starts: np.ndarray, ends: np.ndarray, n: int,
                        page_size: int = DEFAULT_PAGE_SIZE) -> "PAC":
         """PAC covering half-open [start, end) ranges (label filtering)."""

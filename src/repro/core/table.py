@@ -23,9 +23,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .encoding import (DEFAULT_PAGE_SIZE, DeltaColumn, RleColumn,
-                       delta_decode_column, delta_decode_range,
-                       delta_encode_column, pages_touched, rle_decode_bool,
-                       rle_encode_bool)
+                       delta_decode_column, delta_encode_column,
+                       rle_decode_bool, rle_encode_bool)
 
 NUMPY_DTYPES = {
     "int32": np.int32, "int64": np.int64,
@@ -266,17 +265,34 @@ class DeltaIntColumn(Column):
         return delta_decode_column(self.encoded)
 
     def read_range(self, lo: int, hi: int, meter=None) -> np.ndarray:
-        _, _, nbytes = pages_touched(self.encoded, lo, hi)
-        self._charge(meter, nbytes, 1)
-        return delta_decode_range(self.encoded, lo, hi)
+        # routed through _decode_pages so the single-vertex path shares
+        # the decoded-page LRU (and its miss-only charging) with the
+        # batched paths -- engines must meter identically either way
+        if hi <= lo:
+            return np.zeros(0, np.int64)
+        ps = self.page_size
+        p0, p1 = lo // ps, (hi - 1) // ps + 1
+        decoded = self._decode_pages(list(range(p0, p1)), meter)
+        joined = np.concatenate([decoded[p] for p in range(p0, p1)])
+        return joined[lo - p0 * ps: hi - p0 * ps]
 
     def _decode_pages(self, pages: Sequence[int], meter=None):
         from .encoding import delta_decode_page
-        nbytes = sum(self.encoded.pages[p].nbytes() for p in pages)
-        nreq = 1 + int(np.sum(np.diff(np.asarray(list(pages))) > 1)) \
-            if pages else 0
-        self._charge(meter, nbytes, max(nreq, 1))
-        return {p: delta_decode_page(self.encoded.pages[p]) for p in pages}
+        from .page_cache import miss_runs
+        cache = self.encoded.page_cache
+        if cache is None:
+            out, miss = {}, [int(p) for p in pages]
+        else:
+            out, miss = cache.split(pages)
+        if miss:
+            nbytes = sum(self.encoded.pages[p].nbytes() for p in miss)
+            self._charge(meter, nbytes, miss_runs(miss))
+            for p in miss:
+                d = delta_decode_page(self.encoded.pages[p])
+                out[p] = d
+                if cache is not None:
+                    cache.put(p, d)
+        return out
 
 
 class BoolRleColumn(Column):

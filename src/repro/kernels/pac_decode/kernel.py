@@ -16,7 +16,19 @@ Kernels:
   * ``delta_decode_kernel``  -- decode a batch of delta pages to int32 IDs.
   * ``bitmap_kernel``        -- sorted IDs -> bitmap words over a target
                                 range, OR-accumulated across ID tiles.
-  * ``fused_decode_bitmap``  -- both, without materializing IDs in HBM.
+  * ``fused_decode_bitmap``  -- both, without materializing IDs in HBM
+                                (single page-aligned range).
+  * ``fused_decode_bitmap_batch`` -- the batched retrieval plane's fused
+                                entry: an arbitrary deduplicated page list
+                                + merged range bounds -> one dense target
+                                bitmap, in one dispatch.  Unsorted /
+                                duplicated IDs (a page interleaves many
+                                vertices' neighbor lists) are handled by an
+                                in-kernel sort + rank lookup, which is
+                                exact under any multiplicity (sum==OR
+                                tricks are not); a TPU build would use a
+                                bitonic in-VMEM sort and the word-tiled
+                                compare of ``_bitmap_tile``.
 """
 from __future__ import annotations
 
@@ -192,6 +204,122 @@ def _fused_kernel(first_ref, mind_ref, bw_ref, woff_ref, packed_ref,
     hit = (rel_word[:, None] == cols[None, :]) & valid[:, None]
     contrib = jnp.where(hit, bit[:, None], jnp.uint32(0))
     out_ref[0] |= contrib.sum(axis=0, dtype=jnp.uint32)
+
+
+def _unpack_and_scan_batch(first, min_deltas, bit_widths, word_offsets,
+                           packed, counts, page_size):
+    """All pages' packed miniblocks -> decoded int32 IDs, one shot.
+
+    Batched (leading page axis kept) version of :func:`_unpack_and_scan`:
+    every step is an elementwise op, a row-gather, or a row-wise cumsum,
+    so the whole page stack decodes in a single vectorized pass.  Returns
+    ``ids[n_pages, page_size]`` (positions >= count hold the running last
+    id -- downstream consumers mask by count / row validity).
+    """
+    n = min_deltas.shape[0]
+    n_deltas = page_size - 1
+    idx = jnp.arange(n_deltas, dtype=jnp.int32)
+    mini = idx // MINIBLOCK
+    within = idx % MINIBLOCK
+    bw = jnp.take(bit_widths, mini, axis=1).astype(jnp.int32)     # [n, D]
+    woff = jnp.take(word_offsets, mini, axis=1)                   # [n, D]
+    bit_pos = within[None, :] * bw
+    word_idx = woff + bit_pos // 32
+    shift = (bit_pos % 32).astype(jnp.uint32)
+    words = jnp.take_along_axis(packed, word_idx, axis=1,
+                                mode="clip")
+    mask = jnp.where(bw >= 32, jnp.uint32(0xFFFFFFFF),
+                     (jnp.uint32(1) << bw.astype(jnp.uint32)) - 1)
+    resid = ((words >> shift) & mask).astype(jnp.int32)
+    resid = jnp.where(bw == 0, 0, resid)
+    deltas = resid + jnp.take(min_deltas, mini, axis=1)
+    deltas = jnp.where(idx[None, :] < counts - 1, deltas, 0)
+    return first + jnp.concatenate(
+        [jnp.zeros((n, 1), jnp.int32), jnp.cumsum(deltas, axis=1)], axis=1)
+
+
+def _bitmap_from_gather(ids, gidx, gcount, page_size, n_words):
+    """Shared fused tail: decoded page matrix -> dense target bitmap.
+
+    ``gidx`` holds the flat (block_row * page_size + offset) position of
+    every requested row (zero-padded past ``gcount``) -- the host knows
+    the requested-row *positions* without ever seeing the decoded ids.
+    The requested ids are gathered, sorted with an out-of-range sentinel
+    for the padding, and bit ``t`` of the output is set iff some sorted id
+    equals ``t`` (rank lookup) -- exact under duplicate and unsorted ids,
+    and O(total + targets) instead of a per-target scatter (slow on every
+    backend here) or a full-page-matrix pass.
+    """
+    n_slots = n_words * 32
+    flat = jnp.take(ids.reshape(-1), gidx, mode="clip")
+    k = jnp.arange(gidx.shape[0], dtype=jnp.int32)
+    s = jnp.sort(jnp.where(k < gcount, flat, n_slots))
+    targets = jnp.arange(n_slots, dtype=jnp.int32)
+    pos = jnp.searchsorted(s, targets, side="left")
+    hit = jnp.take(s, pos, mode="clip") == targets
+    bits = hit.astype(jnp.uint32).reshape(n_words, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, :]
+    return (bits << shifts).sum(axis=1, dtype=jnp.uint32)
+
+
+def _fused_batch_kernel(first_ref, mind_ref, bw_ref, woff_ref, packed_ref,
+                        count_ref, gidx_ref, gcount_ref, words_ref, ids_ref,
+                        *, page_size, n_words):
+    ids = _unpack_and_scan_batch(
+        first_ref[...], mind_ref[...], bw_ref[...], woff_ref[...],
+        packed_ref[...], count_ref[...], page_size)
+    ids_ref[...] = ids
+    words_ref[...] = _bitmap_from_gather(ids, gidx_ref[...],
+                                         gcount_ref[0, 0], page_size,
+                                         n_words)
+
+
+@functools.partial(jax.jit, static_argnames=("page_size", "n_words",
+                                             "interpret"))
+def fused_decode_bitmap_batch(first, min_deltas, bit_widths, word_offsets,
+                              packed, counts, gidx, gcount, page_size: int,
+                              n_words: int, interpret: bool = True):
+    """Deduplicated page list + requested-row positions -> target bitmap.
+
+    One dispatch for the whole batch: batched unpack->scan decode of every
+    page, then bitmap construction over the target id space
+    [0, 32 * n_words) from the ``gcount`` requested rows addressed by
+    ``gidx`` (int32[t], flat block_row * page_size + offset positions,
+    zero-padded).  Returns ``(words, ids)``: ``uint32[n_words]`` plus the
+    decoded page matrix ``int32[n, page_size]`` (a by-product of the
+    decode -- callers feed it to the decoded-page LRU without a second
+    dispatch; they simply skip the host transfer when no cache is
+    attached).
+    """
+    n, n_mini = min_deltas.shape
+    max_words = packed.shape[1]
+    t = gidx.shape[0]
+    kern = functools.partial(_fused_batch_kernel, page_size=page_size,
+                             n_words=n_words)
+    return pl.pallas_call(
+        kern,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+            pl.BlockSpec((n, n_mini), lambda i: (0, 0)),
+            pl.BlockSpec((n, n_mini), lambda i: (0, 0)),
+            pl.BlockSpec((n, n_mini), lambda i: (0, 0)),
+            pl.BlockSpec((n, max_words), lambda i: (0, 0)),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+            pl.BlockSpec((t,), lambda i: (0,)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n_words,), lambda i: (0,)),
+            pl.BlockSpec((n, page_size), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_words,), jnp.uint32),
+            jax.ShapeDtypeStruct((n, page_size), jnp.int32),
+        ],
+        interpret=interpret,
+    )(first, min_deltas, bit_widths, word_offsets, packed, counts, gidx,
+      gcount)
 
 
 @functools.partial(jax.jit,

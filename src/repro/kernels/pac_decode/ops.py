@@ -13,21 +13,41 @@ Two granularities:
 Both paths read pages through the cached column-wide packed representation
 (:func:`repro.core.encoding.pack_column`), so the VMEM-layout batch arrays
 are materialized once per column instead of once per query.
+
+Two cross-cutting performance layers (PR 2):
+
+* **decoded-page LRU** -- when a :class:`repro.core.page_cache.DecodedPageCache`
+  is attached to the column, every decode path splits its page set into
+  hits and misses, decodes and IOMeter-charges the **misses only**, and
+  inserts the fresh decodes back (see ``decode_page_list``);
+* **fused batched decode->bitmap** -- ``retrieve_pac_batch`` on the
+  jax/pallas engines runs page-pack -> multi-range decode -> target-bitmap
+  scatter in one kernel dispatch and builds the merged PAC straight from
+  the returned bitmap planes (``PAC.from_dense_bitmap``), never
+  materializing the concatenated per-range id list on the host.
 """
 from __future__ import annotations
 
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 import jax.numpy as jnp
 
 from repro.core.encoding import DeltaColumn, delta_decode_page, pack_column
+from repro.core.labels import intervals_to_ids
 from repro.core.pac import PAC
+from repro.core.page_cache import miss_runs
 
 from . import kernel as K
 from . import ref as R
 
 ENGINES = ("numpy", "jax", "pallas")
+
+#: auto-fused threshold: below this many ranges the host path's
+#: O(neighbors) post-processing beats the fused tail's O(num_targets)
+#: bitmap pass (crossover measured in bench_batch_scaling; the win
+#: criterion is batch >= 64, so 16 leaves comfortable margin both ways).
+FUSED_MIN_RANGES = 16
 
 
 def _next_multiple(x: int, m: int) -> int:
@@ -70,16 +90,18 @@ def decode_pages(col: DeltaColumn, p0: int, p1: int,
     return np.concatenate([ids[i, :counts[i]] for i in range(len(counts))])
 
 
-def decode_page_list(col: DeltaColumn, pages: Sequence[int],
-                     engine: str = "pallas") -> np.ndarray:
-    """Decode an arbitrary page list with one dispatch.
+def _charge_pages(col: DeltaColumn, pages: Sequence[int], meter) -> None:
+    """IOMeter charge for a (sorted) page list: each page's bytes once,
+    requests per contiguous run (what a real ranged reader would issue)."""
+    if meter is None or not len(pages):
+        return
+    meter.record(sum(col.pages[int(p)].nbytes() for p in pages),
+                 miss_runs(pages))
 
-    Returns ``int64[len(pages), page_size]``; rows are zero-padded past
-    each page's count (callers only index positions < count).  The page
-    batch is padded to a power of two before the jax/pallas dispatch so
-    the jitted kernels retrace O(log n) times, not once per distinct
-    frontier size.
-    """
+
+def _decode_page_matrix(col: DeltaColumn, pages: Sequence[int],
+                        engine: str) -> np.ndarray:
+    """Engine dispatch only -- no cache, no metering (see decode_page_list)."""
     ps = col.page_size
     n = len(pages)
     if engine == "numpy":
@@ -107,6 +129,48 @@ def decode_page_list(col: DeltaColumn, pages: Sequence[int],
     return np.where(cols < counts[:, None], ids, 0)
 
 
+def decode_page_list(col: DeltaColumn, pages: Sequence[int],
+                     engine: str = "pallas", meter=None) -> np.ndarray:
+    """Decode an arbitrary (sorted, deduplicated) page list, one dispatch.
+
+    Returns ``int64[len(pages), page_size]``; rows are zero-padded past
+    each page's count (callers only index positions < count).  The page
+    batch is padded to a power of two before the jax/pallas dispatch so
+    the jitted kernels retrace O(log n) times, not once per distinct
+    frontier size.
+
+    When the column carries a decoded-page LRU (``col.page_cache``), only
+    the cache-miss pages are decoded and IOMeter-charged; hit rows are
+    assembled from the cache and cost no lake I/O.  Without a cache every
+    page is a miss (the pre-LRU accounting, unchanged).
+    """
+    ps = col.page_size
+    n = len(pages)
+    if n == 0:
+        return np.zeros((0, ps), np.int64)
+    cache = col.page_cache
+    if cache is None:
+        _charge_pages(col, pages, meter)
+        return _decode_page_matrix(col, pages, engine)
+    hits, miss = cache.split(pages)
+    _charge_pages(col, miss, meter)
+    out = np.zeros((n, ps), np.int64)
+    if miss:
+        mat = _decode_page_matrix(col, miss, engine)
+        miss_pos = {p: i for i, p in enumerate(miss)}
+        for p in miss:
+            cnt = col.pages[p].count
+            cache.put(p, mat[miss_pos[p], :cnt].copy())
+    for i, p in enumerate(pages):
+        p = int(p)
+        if p in hits:
+            d = hits[p]
+            out[i, :len(d)] = d
+        else:
+            out[i] = mat[miss_pos[p]]
+    return out
+
+
 # --------------------------------------------------------------------------
 # batched multi-range decode (the batched retrieval plane's kernel entry)
 # --------------------------------------------------------------------------
@@ -124,13 +188,9 @@ def page_set_for_ranges(los: np.ndarray, his: np.ndarray, page_size: int
     if not keep.any():
         return np.zeros(0, np.int64), 0
     p0 = los[keep] // page_size
-    p1 = his[keep] // page_size + ((his[keep] % page_size) != 0) - 1
-    counts = p1 - p0 + 1
-    total = int(counts.sum())
-    within = np.arange(total) - np.repeat(np.cumsum(counts) - counts, counts)
-    pages = np.unique(np.repeat(p0, counts) + within)
-    runs = 1 + int(np.sum(np.diff(pages) > 1))
-    return pages, runs
+    p1 = his[keep] // page_size + ((his[keep] % page_size) != 0)
+    pages = np.unique(intervals_to_ids((p0, p1)))
+    return pages, miss_runs(pages)
 
 
 def decode_row_ranges(col: DeltaColumn, los, his, meter=None,
@@ -138,9 +198,10 @@ def decode_row_ranges(col: DeltaColumn, los, his, meter=None,
     """Concatenated rows over many [lo, hi) ranges, one decode dispatch.
 
     The deduplicated page set is decoded **once** (numpy / jnp ref /
-    Pallas kernel -- same IOMeter accounting for all three: each touched
-    page's bytes charged once, requests counted per contiguous page run),
-    then every output element is gathered from the decoded page matrix.
+    Pallas kernel -- same IOMeter accounting for all three: each
+    cache-miss page's bytes charged once, requests counted per contiguous
+    miss run), then every output element is gathered from the decoded
+    page matrix.
     """
     los = np.asarray(los, np.int64)
     his = np.asarray(his, np.int64)
@@ -149,24 +210,111 @@ def decode_row_ranges(col: DeltaColumn, los, his, meter=None,
     if total == 0:
         return np.zeros(0, np.int64)
     ps = col.page_size
-    pages, runs = page_set_for_ranges(los, his, ps)
-    if meter is not None:
-        meter.record(sum(col.pages[int(p)].nbytes() for p in pages), runs)
-    mat = decode_page_list(col, pages, engine)
+    pages, _ = page_set_for_ranges(los, his, ps)
+    mat = decode_page_list(col, pages, engine, meter=meter)
     # absolute row index of every output element
-    keep = lengths > 0
-    l = los[keep]
-    k = lengths[keep]
-    within = np.arange(total) - np.repeat(np.cumsum(k) - k, k)
-    rows = np.repeat(l, k) + within
+    rows = intervals_to_ids((los, his))
     page_of = rows // ps
     pidx = np.searchsorted(pages, page_of)
     return mat[pidx, rows - page_of * ps]
 
 
+def _gather_positions(pages: np.ndarray, los: np.ndarray, his: np.ndarray,
+                      page_size: int) -> Tuple[np.ndarray, int]:
+    """Flat (block_row * page_size + offset) position of every requested
+    row, zero-padded to a power of two.
+
+    These are row *positions* (derivable from the <offset> index alone),
+    not decoded ids -- the host addresses the requested rows inside the
+    kernel's decoded page matrix without ever materializing the
+    concatenated id list.  Returns ``(int32[t], total)``.
+    """
+    rows = intervals_to_ids((los, his))
+    total = len(rows)
+    page_of = rows // page_size
+    pidx = np.searchsorted(pages, page_of)
+    gidx = (pidx * page_size + (rows - page_of * page_size)) \
+        .astype(np.int32)
+    pad = _next_pow2(total) - total
+    if pad:
+        gidx = np.concatenate([gidx, np.zeros(pad, np.int32)])
+    return gidx, total
+
+
+def _retrieve_pac_batch_fused(col: DeltaColumn, los, his,
+                              target_page_size: int, num_targets: int,
+                              meter, engine: str) -> PAC:
+    """Fused path: one dispatch from packed pages to target bitmap planes.
+
+    The decoded ids stay on the device; the host receives only the dense
+    bitmap (``PAC.from_dense_bitmap`` keeps the non-empty planes).  With a
+    decoded-page LRU attached, hits are not re-charged and the kernel's
+    by-product page matrix backfills the cache for the miss pages (the one
+    case where the matrix is pulled to the host).
+    """
+    ps = col.page_size
+    pages, _ = page_set_for_ranges(los, his, ps)
+    if pages.size == 0:
+        return PAC(target_page_size)
+    cache = col.page_cache
+    if cache is None:
+        miss = [int(p) for p in pages]
+    else:
+        _, miss = cache.split(pages)
+    _charge_pages(col, miss, meter)
+    gidx, total = _gather_positions(pages, los, his, ps)
+    args = pack_page_list(col, pages)
+    n = len(pages)
+    pad = _next_pow2(n) - n
+    if pad:
+        args = tuple(np.concatenate(
+            [a, np.zeros((pad,) + a.shape[1:], a.dtype)]) for a in args)
+    n_words = -(-num_targets // 32)
+    jargs = [jnp.asarray(a) for a in args] \
+        + [jnp.asarray(gidx), jnp.full((1, 1), total, np.int32)]
+    if engine == "pallas":
+        words, ids = K.fused_decode_bitmap_batch(*jargs, page_size=ps,
+                                                 n_words=n_words)
+    elif engine == "jax":
+        words, ids = R.fused_batch_ref(*jargs, page_size=ps,
+                                       n_words=n_words)
+    else:
+        raise ValueError(f"fused path requires a kernel engine, not "
+                         f"{engine!r}")
+    if cache is not None and miss:
+        mat = np.asarray(ids, np.int64)
+        pos = {int(p): i for i, p in enumerate(pages)}
+        for p in miss:
+            cnt = col.pages[p].count
+            cache.put(p, mat[pos[p], :cnt].copy())
+    return PAC.from_dense_bitmap(np.asarray(words), target_page_size)
+
+
 def retrieve_pac_batch(col: DeltaColumn, los, his, target_page_size: int,
-                       meter=None, engine: str = "pallas") -> PAC:
-    """Batched Definition 2: many row ranges -> one merged (unioned) PAC."""
+                       meter=None, engine: str = "pallas",
+                       num_targets: Optional[int] = None,
+                       fused: Optional[bool] = None) -> PAC:
+    """Batched Definition 2: many row ranges -> one merged (unioned) PAC.
+
+    Kernel engines take the fused decode->bitmap path whenever the target
+    id space is known (``num_targets``), the target page size is
+    word-aligned, and the batch is large enough to amortize the fused
+    tail's O(num_targets) bitmap pass (small batches keep the host path,
+    which is O(neighbors) and faster there -- see bench_batch_scaling);
+    ``fused`` forces the choice either way (the host path -- decode +
+    ``PAC.from_ids`` -- is kept as the oracle and numpy route).
+    """
+    los = np.asarray(los, np.int64)
+    his = np.asarray(his, np.int64)
+    if fused is None:
+        fused = (engine != "numpy" and num_targets is not None
+                 and target_page_size % 32 == 0
+                 and len(los) >= FUSED_MIN_RANGES)
+    if fused:
+        if num_targets is None:
+            raise ValueError("fused=True requires num_targets")
+        return _retrieve_pac_batch_fused(col, los, his, target_page_size,
+                                         int(num_targets), meter, engine)
     ids = decode_row_ranges(col, los, his, meter, engine)
     if ids.size == 0:
         return PAC(target_page_size)

@@ -1,6 +1,8 @@
 """Pure-jnp oracle for the pac_decode kernels (same padded inputs)."""
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -50,6 +52,23 @@ def bitmap_ref(ids, count, base, n_words: int):
     contrib = jnp.where(in_range, bit, 0)
     return out.at[jnp.where(in_range, word, 0)].add(
         contrib, mode="drop").astype(jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("page_size", "n_words"))
+def fused_batch_ref(first, min_deltas, bit_widths, word_offsets, packed,
+                    counts, gidx, gcount, page_size: int, n_words: int):
+    """jnp reference of ``fused_decode_bitmap_batch`` (same outputs).
+
+    Decode goes through the vmapped per-page oracle; the bitmap tail is
+    the shared rank-lookup (validated against the numpy PAC oracle in
+    tests, which is the ground truth for both engines).
+    """
+    from .kernel import _bitmap_from_gather
+    ids = decode_pages_ref(first, min_deltas, bit_widths, word_offsets,
+                           packed, counts, page_size)
+    ids = ids.astype(jnp.int32)
+    words = _bitmap_from_gather(ids, gidx, gcount[0, 0], page_size, n_words)
+    return words, ids
 
 
 def fused_ref(first, min_deltas, bit_widths, word_offsets, packed, counts,

@@ -168,6 +168,22 @@ class ServeEngine:
                 self.slots[i] = None
                 self.slot_pos[i] = 0
 
+    def stats(self) -> Dict[str, object]:
+        """Engine counters, including the retrieval plane's per-tick
+        batching and decoded-page cache hit/miss counters when the
+        context_fn exposes them (e.g. :class:`GraphRetriever`) -- the
+        observable signal that warm-tick serving stops re-paying decode
+        and lake I/O for hot pages."""
+        s: Dict[str, object] = {
+            "steps": self.steps,
+            "finished": len(self.finished),
+            "queued": len(self.queue),
+            "active": len(self._active()),
+        }
+        if self.context_fn is not None and hasattr(self.context_fn, "stats"):
+            s["retrieval"] = self.context_fn.stats()
+        return s
+
     def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
         """Tick until queue and slots are empty; returns the requests
         retired during this call (in retirement order)."""

@@ -1,0 +1,20 @@
+"""Decode-engine selection for the test suite.
+
+The engine-matrix CI job runs the suite once per engine by exporting
+``REPRO_ENGINE`` (numpy / jax / pallas); locally, with the variable
+unset, every parametrized test covers all three engines in one run.
+"""
+import os
+
+ALL_ENGINES = ("numpy", "jax", "pallas")
+KERNEL_ENGINES = ("jax", "pallas")
+
+
+def engines(kernel_only: bool = False):
+    pool = KERNEL_ENGINES if kernel_only else ALL_ENGINES
+    e = os.environ.get("REPRO_ENGINE")
+    if e:
+        if e not in ALL_ENGINES:
+            raise ValueError(f"REPRO_ENGINE={e!r}; want one of {ALL_ENGINES}")
+        return [e] if e in pool else []
+    return list(pool)

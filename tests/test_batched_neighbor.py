@@ -12,8 +12,9 @@ from repro.core.vertex import VertexTable
 from repro.core.schema import PropertySchema, VertexTypeSchema
 from repro.data.synthetic import powerlaw_graph
 from repro.kernels.pac_decode import ops as pdo
+from _engines import engines
 
-ENGINES = ["numpy", "jax", "pallas"]
+ENGINES = engines()
 N = 2000
 PAGE = 256
 

@@ -182,3 +182,37 @@ def test_builder_end_to_end_and_yaml(tmp_path):
     assert "vertex_doc" in store.list_tables()
     schema = store.read_schema_yaml()
     assert schema.name == "g"
+
+
+# ---------------------- vectorized intervals_to_ids ----------------------
+
+def _intervals_to_ids_oracle(starts, ends):
+    """The pre-vectorization loop: one np.arange per interval."""
+    if len(starts) == 0:
+        return np.zeros(0, np.int64)
+    return np.concatenate([np.arange(s, e, dtype=np.int64)
+                           for s, e in zip(starts, ends)]
+                          or [np.zeros(0, np.int64)])
+
+
+@given(st.lists(st.tuples(st.integers(min_value=0, max_value=5000),
+                          st.integers(min_value=0, max_value=60)),
+                min_size=0, max_size=50))
+@settings(max_examples=60, deadline=None)
+def test_intervals_to_ids_matches_loop_oracle(pairs):
+    starts = np.array([s for s, _ in pairs], np.int64)
+    ends = starts + np.array([l for _, l in pairs], np.int64)
+    got = intervals_to_ids((starts, ends))
+    np.testing.assert_array_equal(got,
+                                  _intervals_to_ids_oracle(starts, ends))
+
+
+def test_intervals_to_ids_edge_cases():
+    empty = np.zeros(0, np.int64)
+    assert intervals_to_ids((empty, empty)).size == 0
+    # empty intervals interleaved with real ones, unordered and overlapping
+    starts = np.array([9, 3, 3, 20, 5], np.int64)
+    ends = np.array([9, 6, 3, 23, 7], np.int64)
+    np.testing.assert_array_equal(
+        intervals_to_ids((starts, ends)),
+        np.array([3, 4, 5, 20, 21, 22, 5, 6], np.int64))

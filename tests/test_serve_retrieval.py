@@ -87,3 +87,51 @@ def test_engine_attaches_context_one_retrieval_per_tick(engine_parts,
     assert retr.calls == 1
     assert retr.vertices_seen == len(seeds)
     assert all(r.context_tokens > 0 for r in finished)
+    # engine surfaces the retrieval plane's counters
+    stats = eng.stats()
+    assert stats["finished"] == len(seeds)
+    assert stats["retrieval"]["calls"] == 1
+    assert "page_cache" in stats["retrieval"]
+
+
+def test_retriever_warm_ticks_charge_less(doc_lake):
+    from repro.core import IOMeter
+    adj, tokens_col = doc_lake
+    m = IOMeter()
+    r = GraphRetriever(adj, tokens_col, max_neighbors=2,
+                       tokens_per_neighbor=8, meter=m, page_cache_pages=64)
+    r.page_cache.clear()
+    r.page_cache.reset_stats()
+    vs = np.flatnonzero(adj.degrees() > 0)[:8]
+    c1 = r(vs)
+    cold = m.nbytes
+    c2 = r(vs)
+    warm = m.nbytes - cold
+    assert warm < cold                     # decode served from the LRU
+    for a, b in zip(c1, c2):
+        np.testing.assert_array_equal(a, b)
+    s = r.stats()
+    assert s["calls"] == 2
+    assert s["page_cache"]["hits"] > 0
+
+
+def test_retriever_cache_opt_out_detaches(doc_lake):
+    adj, tokens_col = doc_lake
+    GraphRetriever(adj, tokens_col, page_cache_pages=16)   # leaves a cache
+    r = GraphRetriever(adj, tokens_col, page_cache_pages=None)
+    # opt-out must actually detach: decode paths consult the column cache
+    assert adj.table[adj.value_col].encoded.page_cache is None
+    assert r.page_cache is None
+    assert "page_cache" not in r.stats()
+
+
+def test_retriever_stats_track_live_cache(doc_lake):
+    from repro.core import attach_page_cache
+    adj, tokens_col = doc_lake
+    r = GraphRetriever(adj, tokens_col, page_cache_pages=64)
+    # a later re-attach with another capacity replaces the column's cache;
+    # stats() must follow the cache the decode paths actually consult
+    fresh = attach_page_cache(adj.table[adj.value_col], 32)
+    assert r.page_cache is fresh
+    assert r.stats()["page_cache"]["capacity"] == 32
+    adj.table[adj.value_col].encoded.page_cache = None
