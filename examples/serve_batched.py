@@ -1,16 +1,21 @@
 """Batched serving demo: continuous batching over a fixed-slot KV cache,
-with retrieval-augmented prompts pulled from a GraphAr lake.
+with label-scoped retrieval-augmented prompts pulled from a GraphAr lake.
 
 Context is gathered through the batched retrieval plane: each engine tick
 issues ONE batched neighbor retrieval (vectorized offsets gather +
 page-deduplicated decode) for every request admitted in that tick, instead
-of a per-request loop over the lake.
+of a per-request loop over the lake.  The retrieval is **label-scoped**
+(PR 3): a compiled label predicate -- here "HighQuality and not Spam" --
+rides on the retriever, so only passages satisfying it contribute RAG
+context; the predicate bitmap is evaluated once by the filtering plane and
+cached across ticks, and `ServeEngine.stats()` surfaces both the
+decoded-page LRU counters and the filter's considered/kept counters.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py
 """
 import numpy as np
 
-from repro.core import (BY_SRC, EdgeTypeSchema, GraphArBuilder, IOMeter,
+from repro.core import (BY_SRC, EdgeTypeSchema, GraphArBuilder, IOMeter, L,
                         PropertySchema, VertexTypeSchema)
 from repro.configs import get_config
 from repro.data.synthetic import document_graph
@@ -33,18 +38,20 @@ def main():
     adj = graph.adjacency("doc-links-doc", BY_SRC)
     tokens_col = graph.vertex("doc").table["tokens"]
 
-    # -- model + engine with a batched lake retriever -------------------------
+    # -- model + engine with a label-scoped batched lake retriever -----------
     cfg = get_config("smollm-360m").reduced().with_(
         n_units=2, vocab_size=512)
     model = build_model(cfg)
     params = model.init(0)
     meter = IOMeter()
     retriever = GraphRetriever(adj, tokens_col, max_neighbors=2,
-                               tokens_per_neighbor=16, meter=meter)
+                               tokens_per_neighbor=16, meter=meter,
+                               filter_vt=graph.vertex("doc"),
+                               filter_cond=L("HighQuality") & ~L("Spam"))
     eng = ServeEngine(model, params, max_slots=4, max_len=256, eos_id=-1,
                       context_fn=retriever)
 
-    # -- requests: prompt = seed doc; neighbor passages attached per tick ----
+    # -- requests: prompt = seed doc; labeled neighbor passages per tick -----
     rng = np.random.default_rng(0)
     for rid in range(8):
         doc = int(rng.integers(0, lake.num_docs))
@@ -58,8 +65,12 @@ def main():
           f"steps; {retriever.calls} batched retrievals for "
           f"{retriever.vertices_seen} seeds ({ctx} context tokens, "
           f"{meter.nbytes} lake bytes)")
-    # cross-tick decoded-page LRU: warm ticks stop re-paying hot-page decode
-    print("retrieval stats:", eng.stats()["retrieval"])
+    # cross-tick decoded-page LRU + filtering-plane counters: warm ticks
+    # stop re-paying hot-page decode, and only predicate-passing neighbors
+    # contribute context
+    stats = eng.stats()["retrieval"]
+    print("page cache:", stats["page_cache"])
+    print("label filter:", stats["filter"])
 
 
 if __name__ == "__main__":

@@ -12,6 +12,14 @@ merge-based algorithm merges the ``k`` sorted position lists into one list
 a CPU idiom) and calls the UDF once per merged interval -- vectorized here as
 a single batched evaluation over all representatives.
 
+The filtering plane (PR 3): a :class:`Cond` tree is **compiled** to a flat
+postfix program (:func:`compile_cond`) evaluated by a stack machine with no
+per-node recursion -- the same program runs over numpy boolean planes at run
+representatives (host engine), uint32 bitmap words, or jnp planes inside the
+``kernels/label_filter`` kernels.  :class:`LabelFilter` bundles a vertex
+table with a compiled predicate so retrieval paths can push the filter down
+into the fused decode->bitmap dispatch (see ``core/neighbor.py``).
+
 Baselines reproduced for the paper's figures:
 * ``filter_string``        -- decode concatenated label strings, match per vertex
 * ``filter_binary_plain``  -- per-vertex boolean column scan
@@ -20,6 +28,7 @@ Baselines reproduced for the paper's figures:
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Dict, List, Sequence, Tuple
 
 import numpy as np
@@ -111,6 +120,197 @@ class Not(Cond):
 
 
 # --------------------------------------------------------------------------
+# compiled condition programs (the engine-dispatched filtering plane)
+# --------------------------------------------------------------------------
+
+OP_LEAF = "leaf"
+OP_NOT = "not"
+OP_AND = "and"
+OP_OR = "or"
+
+
+@dataclasses.dataclass(frozen=True)
+class CondProgram:
+    """A :class:`Cond` tree compiled to a flat postfix program.
+
+    ``labels`` holds the distinct leaf labels in first-use order; ``ops``
+    is the postfix op stream -- ``("leaf", i)`` pushes leaf plane ``i``,
+    ``("not",)`` / ``("and",)`` / ``("or",)`` pop and combine.  Evaluation
+    is a flat loop (:func:`eval_program`), not a per-node ``evaluate``
+    recursion, and is polymorphic over the plane type: numpy boolean
+    arrays at merged-run representatives, uint32 bitmap words, or jnp
+    planes inside a kernel all evaluate the same program.  Frozen/hashable
+    so kernels can specialize on it as a static argument.
+    """
+
+    labels: Tuple[str, ...]
+    ops: Tuple[Tuple, ...]
+
+
+def compile_cond(cond: Cond) -> CondProgram:
+    """Compile a condition tree into a :class:`CondProgram` (iterative
+    postorder walk; the only tree traversal left in the plane)."""
+    if isinstance(cond, CondProgram):
+        return cond
+    labels: List[str] = []
+    index: Dict[str, int] = {}
+    ops: List[Tuple] = []
+    stack: List[Tuple[Cond, bool]] = [(cond, False)]
+    while stack:
+        node, visited = stack.pop()
+        if isinstance(node, L):
+            i = index.setdefault(node.name, len(labels))
+            if i == len(labels):
+                labels.append(node.name)
+            ops.append((OP_LEAF, i))
+        elif visited:
+            ops.append((OP_NOT,) if isinstance(node, Not)
+                       else (OP_AND,) if isinstance(node, And) else (OP_OR,))
+        elif isinstance(node, Not):
+            stack += [(node, True), (node.a, False)]
+        elif isinstance(node, (And, Or)):
+            stack += [(node, True), (node.b, False), (node.a, False)]
+        else:
+            raise TypeError(f"cannot compile {type(node).__name__}")
+    return CondProgram(tuple(labels), tuple(ops))
+
+
+def eval_program(ops: Sequence[Tuple], leaves: Sequence):
+    """Stack-machine evaluation of a postfix op stream over leaf planes.
+
+    Planes only need ``&``, ``|``, ``~`` -- numpy bool arrays, uint32
+    words, and traced jnp arrays all qualify.  NOT over word planes sets
+    tail bits past the row count; callers mask the final plane once.
+    """
+    stack: List = []
+    for op in ops:
+        if op[0] == OP_LEAF:
+            stack.append(leaves[op[1]])
+        elif op[0] == OP_NOT:
+            stack.append(~stack.pop())
+        else:
+            b, a = stack.pop(), stack.pop()
+            stack.append((a & b) if op[0] == OP_AND else (a | b))
+    if len(stack) != 1:
+        raise ValueError(f"malformed program: {len(stack)} planes left")
+    return stack[0]
+
+
+def charge_label_metadata(vt: VertexTable, names: Sequence[str],
+                          meter) -> None:
+    """IOMeter charge for reading the referenced labels' RLE metadata --
+    the one I/O a label filter performs.  Shared by every engine so the
+    accounting is identical by construction."""
+    if meter is None:
+        return
+    for n in dict.fromkeys(names):
+        vt.label_column(n).read_range(0, 0, meter)
+
+
+# --------------------------------------------------------------------------
+# interval plane <-> bitmap plane
+# --------------------------------------------------------------------------
+
+def intervals_to_bitmap(iv: Intervals, n: int) -> np.ndarray:
+    """uint32 bitmap words over ``[0, n)`` with the intervals' bits set
+    (vectorized boundary-marker cumsum; no per-interval loop)."""
+    n_words = -(-n // 32)
+    if n_words == 0:
+        return np.zeros(0, np.uint32)
+    starts = np.minimum(np.asarray(iv[0], np.int64), n)
+    ends = np.minimum(np.asarray(iv[1], np.int64), n)
+    mark = np.zeros(n_words * 32 + 1, np.int32)
+    np.add.at(mark, starts, 1)
+    np.add.at(mark, ends, -1)
+    dense = np.cumsum(mark[:-1]) > 0
+    return np.packbits(dense, bitorder="little").view(np.uint32)
+
+
+def bitmap_to_intervals(words: np.ndarray, n: int) -> Intervals:
+    """Coalesced half-open intervals of the set bits of a dense bitmap."""
+    bits = np.unpackbits(np.ascontiguousarray(words, np.uint32)
+                         .view(np.uint8), bitorder="little")[:n]
+    edges = np.diff(bits.astype(np.int8), prepend=np.int8(0),
+                    append=np.int8(0))
+    return (np.flatnonzero(edges == 1).astype(np.int64),
+            np.flatnonzero(edges == -1).astype(np.int64))
+
+
+class LabelFilter:
+    """A compiled label predicate bound to one vertex table.
+
+    The unit the retrieval plane's ``filter=`` hook consumes: it owns the
+    compiled program, lazily builds the kernel plane's padded input arrays
+    (:func:`repro.kernels.label_filter.ops.make_plan`), and caches the
+    whole-table bitmap per engine (label columns are immutable).  I/O
+    charging is explicit (:meth:`charge`) so callers apply the same
+    accounting on every execution path.
+    """
+
+    def __init__(self, vt: VertexTable, cond: Cond):
+        self.vt = vt
+        self.cond = cond
+        self.program = compile_cond(cond)
+        self._plan = None
+        self._bitmaps: Dict[str, np.ndarray] = {}
+        self._intervals: "Intervals | None" = None
+        self._pacs: Dict[int, PAC] = {}
+
+    def charge(self, meter) -> None:
+        charge_label_metadata(self.vt, self.program.labels, meter)
+
+    def plan(self):
+        """Padded kernel inputs (positions/meta) + program, built once."""
+        if self._plan is None:
+            from repro.kernels.label_filter import ops as lf_ops
+            self._plan = lf_ops.make_plan(self.vt, self.program)
+        return self._plan
+
+    def intervals(self, engine: str = "numpy") -> Intervals:
+        if engine == "numpy":
+            if self._intervals is None:
+                self._intervals = program_filter_intervals(self.vt,
+                                                           self.program)
+            return self._intervals
+        return bitmap_to_intervals(self.bitmap(engine), self.vt.num_vertices)
+
+    def bitmap(self, engine: str = "numpy") -> np.ndarray:
+        """uint32 words over ``[0, num_vertices)``; cached per engine."""
+        words = self._bitmaps.get(engine)
+        if words is None:
+            from repro.kernels.label_filter import ops as lf_ops
+            words = lf_ops.label_filter_bitmap(self.vt, self.program,
+                                               engine=engine)
+            self._bitmaps[engine] = words
+        return words
+
+    def pac(self, page_size: int, engine: str = "numpy") -> PAC:
+        """Filter PAC over ``page_size`` pages; memoized per page size
+        (label columns are immutable).  Callers must treat the returned
+        PAC as read-only -- derive with ``intersect``/``union``, never
+        mutate it in place."""
+        pac = self._pacs.get(page_size)
+        if pac is None:
+            if engine != "numpy" and page_size % 32 == 0:
+                pac = PAC.from_dense_bitmap(self.bitmap(engine), page_size)
+            else:
+                pac = intervals_to_pac(self.intervals(engine),
+                                       self.vt.num_vertices, page_size)
+            self._pacs[page_size] = pac
+        return pac
+
+    def mask_ids(self, ids: np.ndarray, engine: str = "numpy") -> np.ndarray:
+        """Boolean membership mask for internal ids (bitmap probe)."""
+        ids = np.asarray(ids, np.int64)
+        words = self.bitmap(engine)
+        return ((words[ids >> 5] >> (ids & 31).astype(np.uint32)) & 1) \
+            .astype(bool)
+
+    def __repr__(self) -> str:
+        return f"LabelFilter({self.vt.schema.name}, {self.cond})"
+
+
+# --------------------------------------------------------------------------
 # GraphAr fast paths
 # --------------------------------------------------------------------------
 
@@ -136,14 +336,36 @@ def label_values_at(rle: RleColumn, points: np.ndarray) -> np.ndarray:
             ^ ((run & 1).astype(bool)))
 
 
+def program_filter_intervals(vt: VertexTable,
+                             program: CondProgram) -> Intervals:
+    """Merge-based complex filtering (paper §5.2, Fig. 7) over a compiled
+    program: one vectorized run-boundary merge, leaf planes at the merged
+    representatives (Theorem 1), then the flat stack machine -- the host
+    engine of the filtering plane."""
+    rles = [vt.label_rle(n) for n in program.labels]
+    merged = merge_positions(rles)
+    if merged.size < 2:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    reps = merged[:-1]  # representative = interval start (Theorem 1)
+    leaves = [label_values_at(r, reps) for r in rles]
+    keep = np.asarray(eval_program(program.ops, leaves), bool)
+    return _coalesce(merged[:-1][keep], merged[1:][keep])
+
+
 def complex_filter_intervals(vt: VertexTable, cond: Cond) -> Intervals:
-    """Merge-based complex filtering (paper §5.2, Fig. 7)."""
+    """Compiled merge-based complex filtering (compile + host engine)."""
+    return program_filter_intervals(vt, compile_cond(cond))
+
+
+def evaluate_filter_intervals(vt: VertexTable, cond: Cond) -> Intervals:
+    """Legacy per-node ``evaluate(env)`` recursion -- kept as the oracle
+    the compiled plane is validated against (tests/benchmarks only)."""
     names = list(dict.fromkeys(cond.labels()))
     rles = [vt.label_rle(n) for n in names]
     merged = merge_positions(rles)
     if merged.size < 2:
         return np.zeros(0, np.int64), np.zeros(0, np.int64)
-    reps = merged[:-1]  # representative = interval start (Theorem 1)
+    reps = merged[:-1]
     env = {n: label_values_at(r, reps) for n, r in zip(names, rles)}
     keep = np.asarray(cond.evaluate(env), bool)
     return _coalesce(merged[:-1][keep], merged[1:][keep])
@@ -190,11 +412,18 @@ def intervals_count(iv: Intervals) -> int:
     return int((iv[1] - iv[0]).sum())
 
 
-def filter_rle_interval(vt: VertexTable, cond: Cond, meter=None) -> Intervals:
-    """GraphAr entry point: simple conditions take the O(|P|) path."""
-    if meter is not None:
-        for n in dict.fromkeys(cond.labels()):
-            vt.label_column(n).read_range(0, 0, meter)  # charge metadata
+def filter_rle_interval(vt: VertexTable, cond: Cond, meter=None,
+                        engine: str = "numpy") -> Intervals:
+    """GraphAr entry point, engine-dispatched.
+
+    ``numpy`` keeps the host plane (simple conditions take the O(|P|)
+    odd/even path); kernel engines evaluate the compiled program on-device
+    via :mod:`repro.kernels.label_filter` -- identical IOMeter accounting
+    (the referenced labels' RLE metadata) either way."""
+    if engine != "numpy":
+        from repro.kernels.label_filter import ops as lf_ops
+        return lf_ops.label_filter_intervals(vt, cond, meter, engine)
+    charge_label_metadata(vt, compile_cond(cond).labels, meter)
     if isinstance(cond, L):
         return simple_filter_intervals(vt.label_rle(cond.name), True)
     if isinstance(cond, Not) and isinstance(cond.a, L):

@@ -74,7 +74,8 @@ def retrieve_neighbors_batch(adj: AdjacencyTable, vs,
                              target_page_size: int,
                              meter=None,
                              engine: str = "numpy",
-                             fused: bool | None = None) -> PAC:
+                             fused: bool | None = None,
+                             filter=None) -> PAC:
     """Batched Definition 2: merged PAC of the neighbors of every ``v`` in
     ``vs`` (equal to the union of the per-vertex PACs).
 
@@ -82,23 +83,37 @@ def retrieve_neighbors_batch(adj: AdjacencyTable, vs,
     decode->bitmap kernel (one dispatch, bitmap planes consumed via
     ``PAC.from_dense_bitmap``) whenever the adjacency knows its value-side
     vertex count; ``fused=False`` forces the decode + ``PAC.from_ids``
-    host path (the oracle)."""
+    host path (the oracle).
+
+    ``filter`` -- a :class:`repro.core.labels.LabelFilter` over the
+    value-side vertex table -- pushes a label predicate down into the
+    retrieval: "neighbors of batch B having label L".  On the fused path
+    the predicate bitmap is evaluated and ANDed inside the same kernel
+    dispatch (no host round-trip between filtering and retrieval); the
+    host path intersects with the host-evaluated filter PAC and serves as
+    the oracle.  The filter's label-metadata I/O is charged here, once,
+    identically for every engine/path."""
     vs = np.asarray(vs, np.int64)
     if engine == "numpy" and fused:
         raise ValueError("fused path requires a kernel engine (jax/pallas)")
     if vs.size == 0:
         return PAC(target_page_size)
+    if filter is not None:
+        filter.charge(meter)
     los, his = adj.edge_ranges_batch(vs, meter)
     if engine == "numpy":
         ids = decode_edge_ranges(adj, los, his, meter, engine)
         if ids.size == 0:
             return PAC(target_page_size)
-        return PAC.from_ids(np.unique(ids), target_page_size)
+        pac = PAC.from_ids(np.unique(ids), target_page_size)
+        if filter is not None:
+            pac = pac.intersect(filter.pac(target_page_size))
+        return pac
     from repro.kernels.pac_decode import ops as pac_ops
     return pac_ops.retrieve_pac_batch(_kernel_column(adj), los, his,
                                       target_page_size, meter, engine=engine,
                                       num_targets=adj.num_value_vertices,
-                                      fused=fused)
+                                      fused=fused, label_filter=filter)
 
 
 def retrieve_neighbors(adj: AdjacencyTable, v: int,
@@ -138,6 +153,17 @@ def fetch_properties(pac: PAC, vt: VertexTable, prop: str,
     pages = pac.pages()
     page_vals = vt.read_property_pages(prop, pages, meter)
     return pac.select(page_vals)
+
+
+def fetch_properties_batch(pac: PAC, vt: VertexTable, props,
+                           meter=None) -> dict:
+    """Batched multi-property selection pushdown: every column in
+    ``props`` fetched for exactly the PAC's ids in one deduplicated pass
+    over the PAC's page set (page list and per-page selection indices
+    computed once and shared across columns; delta columns consult the
+    decoded-page LRU).  Per-column results equal :func:`fetch_properties`.
+    """
+    return vt.read_properties_batch(pac, props, meter)
 
 
 def neighbor_properties(adj: AdjacencyTable, v: int, vt: VertexTable,

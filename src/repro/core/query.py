@@ -28,9 +28,10 @@ import numpy as np
 from . import acero
 from .builder import Graph, GraphArBuilder
 from .edge import BY_DST, BY_SRC, ENC_PLAIN, build_adjacency
-from .labels import L, filter_rle_interval, intervals_to_pac
+from .labels import L, LabelFilter, filter_rle_interval, intervals_to_pac
 from .neighbor import (decode_edge_ranges, fetch_properties,
-                       retrieve_neighbors, retrieve_neighbors_batch)
+                       fetch_properties_batch, retrieve_neighbors,
+                       retrieve_neighbors_batch)
 from .pac import PAC
 from .schema import EdgeTypeSchema, PropertySchema, VertexTypeSchema
 from .storage import IOMeter
@@ -179,29 +180,37 @@ def is3_acero(b: SnbBaseline, person: int,
 
 def ic8_graphar(g: Graph, person: int, limit: int = 20,
                 meter: Optional[IOMeter] = None,
-                engine: str = "numpy") -> Tuple[np.ndarray, np.ndarray]:
+                engine: str = "numpy",
+                reply_label: Optional[str] = None
+                ) -> Tuple[np.ndarray, np.ndarray]:
     # hop 1: messages created by person  (hasCreator, incoming = by_dst)
     created = g.adjacency("message-hasCreator-person", BY_DST) \
         .neighbor_ids(person, meter)
     # hop 2: replies to those messages (replyOf, incoming = by_dst) as one
     # batched retrieval: vectorized offsets gather + page-deduplicated
-    # multi-range decode -> merged PAC over the message table's pages
+    # multi-range decode -> merged PAC over the message table's pages.
+    # With `reply_label` the label predicate is pushed down into that same
+    # retrieval (one fused dispatch on kernel engines) instead of a host
+    # round-trip between filtering and retrieval.
     reply_adj = g.adjacency("message-replyOf-message", BY_DST)
     vt = g.vertex("message")
+    filt = LabelFilter(vt, L(reply_label)) if reply_label else None
     pac = retrieve_neighbors_batch(reply_adj, created, vt.page_size, meter,
-                                   engine)
+                                   engine, filter=filt)
     replies = pac.to_ids()
     if replies.size == 0:
         return replies, replies
     # fetch reply creationDate via PAC pushdown; top-`limit` newest
-    dates = np.asarray(fetch_properties(pac, vt, "creationDate", meter),
-                       np.int64)
+    dates = np.asarray(
+        fetch_properties_batch(pac, vt, ["creationDate"],
+                               meter)["creationDate"], np.int64)
     order = np.lexsort((-replies, -dates))[:limit]
     return replies[order], dates[order]
 
 
 def ic8_acero(b: SnbBaseline, person: int, limit: int = 20,
-              meter: Optional[IOMeter] = None
+              meter: Optional[IOMeter] = None,
+              reply_label: Optional[str] = None
               ) -> Tuple[np.ndarray, np.ndarray]:
     created = acero.scan(b.has_creator, ["<src>", "<dst>"], meter,
                          predicate=("<dst>", "==", person))
@@ -209,6 +218,10 @@ def ic8_acero(b: SnbBaseline, person: int, limit: int = 20,
     replies = acero.scan(b.reply_of, ["<src>", "<dst>"], meter)
     j = acero.hash_join(replies, created, "<dst>", "<src>")
     reply_ids = np.unique(j["<src>"])
+    if reply_label is not None and reply_ids.size:
+        strings = b.message.table["<labels>"].read_all(meter)
+        mask = acero.string_label_mask(strings, reply_label)
+        reply_ids = reply_ids[mask[reply_ids]]
     if reply_ids.size == 0:
         return reply_ids, reply_ids
     msg = acero.scan(b.message.table, ["creationDate"], meter)
@@ -225,8 +238,10 @@ def bi2_graphar(g: Graph, tagclass: str,
                 meter: Optional[IOMeter] = None,
                 engine: str = "numpy") -> Dict[int, int]:
     msg_vt = g.vertex("message")
-    # interval label filter: messages labeled with the tag class
-    iv = filter_rle_interval(msg_vt, L(tagclass), meter)
+    # interval label filter: messages labeled with the tag class,
+    # engine-dispatched (kernel engines evaluate the compiled predicate
+    # on-device and hand back interval planes; numpy keeps the host path)
+    iv = filter_rle_interval(msg_vt, L(tagclass), meter, engine=engine)
     starts, ends = iv
     adj = g.adjacency("message-hasTag-tag", BY_SRC)
     tag_vt = g.vertex("tag")

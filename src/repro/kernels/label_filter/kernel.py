@@ -1,0 +1,168 @@
+"""Compiled label-predicate -> bitmap Pallas kernels (paper §5, pushed down).
+
+The filtering plane's device entry points.  A :class:`~repro.core.labels.
+CondProgram` is a static (hashable) postfix program over ``k`` RLE label
+columns; the kernels specialize on it, so the whole And/Or/Not tree is
+unrolled into straight-line word ops at trace time -- no recursion, no
+interpretive dispatch on device.
+
+* ``cond_bitmap_pallas`` -- evaluate the program over the label columns'
+  interval position lists, a word tile at a time: each bit position finds
+  its run per leaf via an in-VMEM binary search (O(log |P|) per lane,
+  lane-parallel across the tile), leaf bit planes are combined by the
+  unrolled program, and bits pack to uint32 words with a power-of-two dot.
+  The O(|P|) storage advantage of the RLE interval lists is preserved; the
+  dense per-vertex boolean column is never materialized.
+
+* ``fused_decode_filter_bitmap_batch`` -- the filtering plane fused with
+  the batched retrieval plane: miss-page delta decode (+ host-fed cached
+  rows for LRU hits, which skip the on-device unpack entirely) -> neighbor
+  rank-lookup bitmap -> AND with the predicate bitmap, all in ONE dispatch.
+  "Neighbors of batch B having label L" leaves the kernel as bitmap
+  planes; neither the decoded ids nor the unfiltered bitmap ever reach the
+  host.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.labels import eval_program
+from repro.kernels.pac_decode.kernel import (_bitmap_from_gather,
+                                             _unpack_and_scan_batch)
+
+WORD_TILE = 64  # words per grid step = 2048 bits
+
+
+def eval_cond_bits(pos, meta, lanes, ops: Tuple[Tuple, ...]):
+    """Compiled program over leaf bit planes, statically unrolled.
+
+    ``pos`` int32[k, n_pos] -- each label's interval position list, padded
+    with ``count`` so out-of-range lanes land in the last run; ``meta``
+    int32[k, 2] = (first_value, count); ``lanes`` int32[t] -- absolute bit
+    positions.  Each label's plane is looked up once (in-VMEM binary
+    search, O(log |P|) per lane); the op stream then runs through the one
+    shared stack machine (:func:`repro.core.labels.eval_program`) over
+    traced jnp planes.  Returns bool[t]; lanes >= count are forced False
+    so NOT never sets bits past the row count.
+    """
+    leaves = []
+    for i in range(pos.shape[0]):
+        run = jnp.searchsorted(pos[i], lanes,
+                               side="right").astype(jnp.int32) - 1
+        leaves.append((meta[i, 0] ^ (run & 1)).astype(jnp.int32) == 1)
+    return eval_program(ops, leaves) & (lanes < meta[0, 1])
+
+
+def pack_bits(bits):
+    """bool[n_words * 32] -> uint32[n_words] (sum of distinct powers == OR)."""
+    b = bits.reshape(-1, 32).astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, :]
+    return (b << shifts).sum(axis=1, dtype=jnp.uint32)
+
+
+def _cond_kernel(pos_ref, meta_ref, out_ref, *, ops):
+    wt = pl.program_id(0)
+    lanes = wt * WORD_TILE * 32 + jnp.arange(WORD_TILE * 32, dtype=jnp.int32)
+    bits = eval_cond_bits(pos_ref[...], meta_ref[...], lanes, ops)
+    out_ref[0] = pack_bits(bits)
+
+
+@functools.partial(jax.jit, static_argnames=("n_words", "ops", "interpret"))
+def cond_bitmap_pallas(pos, meta, n_words: int, ops: Tuple[Tuple, ...],
+                       interpret: bool = True):
+    """pos int32[k, n_pos] (padded with count), meta int32[k, 2] =
+    (first_value, count), ``ops`` the static postfix program.  Returns
+    uint32[n_words]."""
+    assert n_words % WORD_TILE == 0
+    k, n_pos = pos.shape
+    kern = functools.partial(_cond_kernel, ops=ops)
+    return pl.pallas_call(
+        kern,
+        grid=(n_words // WORD_TILE,),
+        in_specs=[
+            pl.BlockSpec((k, n_pos), lambda wt: (0, 0)),
+            pl.BlockSpec((k, 2), lambda wt: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, WORD_TILE), lambda wt: (0, wt)),
+        out_shape=jax.ShapeDtypeStruct((1, n_words), jnp.uint32),
+        interpret=interpret,
+    )(pos, meta)[0]
+
+
+# --------------------------------------------------------------------------
+# fused: miss-page decode + cached rows -> neighbor bitmap AND label bitmap
+# --------------------------------------------------------------------------
+
+def _fused_filter_kernel(first_ref, mind_ref, bw_ref, woff_ref, packed_ref,
+                         count_ref, cached_ref, gidx_ref, gcount_ref,
+                         fpos_ref, fmeta_ref, words_ref, ids_ref,
+                         *, page_size, n_words, ops):
+    ids = _unpack_and_scan_batch(
+        first_ref[...], mind_ref[...], bw_ref[...], woff_ref[...],
+        packed_ref[...], count_ref[...], page_size)
+    ids_ref[...] = ids
+    full = jnp.concatenate([ids, cached_ref[...]], axis=0)
+    nbr = _bitmap_from_gather(full, gidx_ref[...], gcount_ref[0, 0],
+                              page_size, n_words)
+    lanes = jnp.arange(n_words * 32, dtype=jnp.int32)
+    bits = eval_cond_bits(fpos_ref[...], fmeta_ref[...], lanes, ops)
+    words_ref[...] = nbr & pack_bits(bits)
+
+
+@functools.partial(jax.jit, static_argnames=("page_size", "n_words", "ops",
+                                             "interpret"))
+def fused_decode_filter_bitmap_batch(first, min_deltas, bit_widths,
+                                     word_offsets, packed, counts, cached,
+                                     gidx, gcount, fpos, fmeta,
+                                     page_size: int, n_words: int,
+                                     ops: Tuple[Tuple, ...],
+                                     interpret: bool = True):
+    """Predicate-pushdown batched retrieval, one dispatch.
+
+    Same contract as ``pac_decode.kernel.fused_decode_bitmap_batch`` (miss
+    pages packed, LRU-hit rows pre-decoded in ``cached``, requested-row
+    positions in ``gidx`` over the [miss | cached] row order), plus the
+    filter inputs of :func:`cond_bitmap_pallas`; the returned ``words``
+    are the neighbor bitmap ANDed with the label-predicate bitmap.
+    Returns ``(words, ids)`` with ``ids`` the decoded miss-page matrix
+    (LRU backfill by-product).
+    """
+    n, n_mini = min_deltas.shape
+    max_words = packed.shape[1]
+    c = cached.shape[0]
+    t = gidx.shape[0]
+    k, n_pos = fpos.shape
+    kern = functools.partial(_fused_filter_kernel, page_size=page_size,
+                             n_words=n_words, ops=ops)
+    return pl.pallas_call(
+        kern,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+            pl.BlockSpec((n, n_mini), lambda i: (0, 0)),
+            pl.BlockSpec((n, n_mini), lambda i: (0, 0)),
+            pl.BlockSpec((n, n_mini), lambda i: (0, 0)),
+            pl.BlockSpec((n, max_words), lambda i: (0, 0)),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+            pl.BlockSpec((c, page_size), lambda i: (0, 0)),
+            pl.BlockSpec((t,), lambda i: (0,)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((k, n_pos), lambda i: (0, 0)),
+            pl.BlockSpec((k, 2), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n_words,), lambda i: (0,)),
+            pl.BlockSpec((n, page_size), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_words,), jnp.uint32),
+            jax.ShapeDtypeStruct((n, page_size), jnp.int32),
+        ],
+        interpret=interpret,
+    )(first, min_deltas, bit_widths, word_offsets, packed, counts, cached,
+      gidx, gcount, fpos, fmeta)

@@ -1,0 +1,117 @@
+"""Jit'd wrappers + storage-plane integration for the filtering plane.
+
+Engine-dispatched label filtering over RLE label columns: a compiled
+:class:`~repro.core.labels.CondProgram` evaluates
+
+* on the ``numpy`` engine as the vectorized run-boundary merge
+  (:func:`repro.core.labels.program_filter_intervals` -- the host oracle),
+* on the ``jax``/``pallas`` engines as an on-device bitmap kernel
+  (:mod:`.kernel` / :mod:`.ref`) over the interval position lists.
+
+All engines charge the same I/O -- the referenced labels' RLE metadata --
+through :func:`repro.core.labels.charge_label_metadata`, so meters agree
+bit-for-bit regardless of where the predicate evaluates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.labels import (Cond, CondProgram, Intervals,
+                               bitmap_to_intervals, charge_label_metadata,
+                               compile_cond, intervals_to_bitmap,
+                               program_filter_intervals)
+from repro.core.pac import PAC
+from repro.core.vertex import VertexTable
+
+from repro.kernels.pac_decode.ops import _next_multiple
+
+from . import kernel as K
+from . import ref as R
+
+ENGINES = ("numpy", "jax", "pallas")
+
+
+@dataclasses.dataclass
+class FilterPlan:
+    """Padded kernel inputs for one (vertex table, program) pair.
+
+    ``pos`` stacks every leaf label's interval position list, padded with
+    ``count`` (the searchsorted sentinel); ``meta[i] = (first_value,
+    count)``.  Built once per filter and reused across dispatches (the
+    arrays are a few KB -- the whole point of the RLE interval lists).
+    """
+
+    program: CondProgram
+    pos: np.ndarray    # int32 [k, n_pos]
+    meta: np.ndarray   # int32 [k, 2]
+    count: int         # number of rows (vertices)
+
+    @property
+    def n_words(self) -> int:
+        return -(-self.count // 32)
+
+
+def make_plan(vt: VertexTable, cond: Union[Cond, CondProgram]) -> FilterPlan:
+    program = compile_cond(cond)
+    if not program.labels:
+        raise ValueError("condition references no labels")
+    rles = [vt.label_rle(n) for n in program.labels]
+    n = vt.num_vertices
+    n_pos = _next_multiple(max(r.positions.size for r in rles), 128)
+    pos = np.full((len(rles), n_pos), n, np.int32)
+    meta = np.zeros((len(rles), 2), np.int32)
+    for i, r in enumerate(rles):
+        pos[i, :r.positions.size] = r.positions
+        meta[i] = (int(r.first_value), n)
+    return FilterPlan(program, pos, meta, n)
+
+
+def label_filter_bitmap(vt: VertexTable, cond: Union[Cond, CondProgram],
+                        meter=None, engine: str = "pallas") -> np.ndarray:
+    """Whole-table predicate bitmap: uint32 words over [0, num_vertices)."""
+    program = compile_cond(cond)
+    charge_label_metadata(vt, program.labels, meter)
+    if engine == "numpy":
+        return intervals_to_bitmap(program_filter_intervals(vt, program),
+                                   vt.num_vertices)
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; want one of {ENGINES}")
+    plan = make_plan(vt, program)
+    n_words = _next_multiple(plan.n_words or 1, K.WORD_TILE)
+    if engine == "pallas":
+        words = K.cond_bitmap_pallas(jnp.asarray(plan.pos),
+                                     jnp.asarray(plan.meta),
+                                     n_words=n_words, ops=program.ops)
+    else:
+        words = R.cond_bitmap_ref(jnp.asarray(plan.pos),
+                                  jnp.asarray(plan.meta),
+                                  n_words=n_words, ops=program.ops)
+    return np.asarray(words)[:plan.n_words]
+
+
+def label_filter_intervals(vt: VertexTable, cond: Union[Cond, CondProgram],
+                           meter=None, engine: str = "pallas") -> Intervals:
+    """Qualifying half-open intervals; engine-dispatched, same accounting."""
+    program = compile_cond(cond)
+    if engine == "numpy":
+        charge_label_metadata(vt, program.labels, meter)
+        return program_filter_intervals(vt, program)
+    return bitmap_to_intervals(
+        label_filter_bitmap(vt, program, meter, engine), vt.num_vertices)
+
+
+def label_filter_pac(vt: VertexTable, cond: Union[Cond, CondProgram],
+                     page_size: int, meter=None,
+                     engine: str = "pallas") -> PAC:
+    """Qualifying ids as a PAC over ``page_size`` pages (bitmap planes on
+    kernel engines -- no host-side id materialization).  One-shot wrapper
+    around :meth:`repro.core.labels.LabelFilter.pac`, which owns the
+    plane-selection logic (and the memoization for long-lived filters)."""
+    from repro.core.labels import LabelFilter
+    f = LabelFilter(vt, cond)
+    f.charge(meter)
+    return f.pac(page_size, engine)

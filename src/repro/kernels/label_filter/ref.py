@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for label_filter (same padded inputs, same programs)."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pac_decode.kernel import _bitmap_from_gather
+from repro.kernels.pac_decode.ref import decode_pages_ref
+
+from .kernel import eval_cond_bits, pack_bits
+
+
+@functools.partial(jax.jit, static_argnames=("n_words", "ops"))
+def cond_bitmap_ref(pos, meta, n_words: int, ops: Tuple[Tuple, ...]):
+    """jnp reference of ``cond_bitmap_pallas`` (whole bitmap in one pass)."""
+    lanes = jnp.arange(n_words * 32, dtype=jnp.int32)
+    return pack_bits(eval_cond_bits(pos, meta, lanes, ops))
+
+
+@functools.partial(jax.jit, static_argnames=("page_size", "n_words", "ops"))
+def fused_filter_batch_ref(first, min_deltas, bit_widths, word_offsets,
+                           packed, counts, cached, gidx, gcount, fpos, fmeta,
+                           page_size: int, n_words: int,
+                           ops: Tuple[Tuple, ...]):
+    """jnp reference of ``fused_decode_filter_bitmap_batch``."""
+    ids = decode_pages_ref(first, min_deltas, bit_widths, word_offsets,
+                           packed, counts, page_size).astype(jnp.int32)
+    full = jnp.concatenate([ids, cached], axis=0)
+    nbr = _bitmap_from_gather(full, gidx, gcount[0, 0], page_size, n_words)
+    lanes = jnp.arange(n_words * 32, dtype=jnp.int32)
+    words = nbr & pack_bits(eval_cond_bits(fpos, fmeta, lanes, ops))
+    return words, ids

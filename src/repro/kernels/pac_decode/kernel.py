@@ -263,13 +263,14 @@ def _bitmap_from_gather(ids, gidx, gcount, page_size, n_words):
 
 
 def _fused_batch_kernel(first_ref, mind_ref, bw_ref, woff_ref, packed_ref,
-                        count_ref, gidx_ref, gcount_ref, words_ref, ids_ref,
-                        *, page_size, n_words):
+                        count_ref, cached_ref, gidx_ref, gcount_ref,
+                        words_ref, ids_ref, *, page_size, n_words):
     ids = _unpack_and_scan_batch(
         first_ref[...], mind_ref[...], bw_ref[...], woff_ref[...],
         packed_ref[...], count_ref[...], page_size)
     ids_ref[...] = ids
-    words_ref[...] = _bitmap_from_gather(ids, gidx_ref[...],
+    full = jnp.concatenate([ids, cached_ref[...]], axis=0)
+    words_ref[...] = _bitmap_from_gather(full, gidx_ref[...],
                                          gcount_ref[0, 0], page_size,
                                          n_words)
 
@@ -277,22 +278,27 @@ def _fused_batch_kernel(first_ref, mind_ref, bw_ref, woff_ref, packed_ref,
 @functools.partial(jax.jit, static_argnames=("page_size", "n_words",
                                              "interpret"))
 def fused_decode_bitmap_batch(first, min_deltas, bit_widths, word_offsets,
-                              packed, counts, gidx, gcount, page_size: int,
-                              n_words: int, interpret: bool = True):
+                              packed, counts, cached, gidx, gcount,
+                              page_size: int, n_words: int,
+                              interpret: bool = True):
     """Deduplicated page list + requested-row positions -> target bitmap.
 
-    One dispatch for the whole batch: batched unpack->scan decode of every
-    page, then bitmap construction over the target id space
-    [0, 32 * n_words) from the ``gcount`` requested rows addressed by
-    ``gidx`` (int32[t], flat block_row * page_size + offset positions,
-    zero-padded).  Returns ``(words, ids)``: ``uint32[n_words]`` plus the
-    decoded page matrix ``int32[n, page_size]`` (a by-product of the
-    decode -- callers feed it to the decoded-page LRU without a second
-    dispatch; they simply skip the host transfer when no cache is
-    attached).
+    One dispatch for the whole batch: batched unpack->scan decode of the
+    LRU-**miss** pages (the only pages shipped packed), then bitmap
+    construction over the target id space [0, 32 * n_words) from the
+    ``gcount`` requested rows addressed by ``gidx`` (int32[t], flat
+    ``row * page_size + offset`` positions into the [miss | cached] row
+    order, zero-padded).  ``cached`` (int32[c, page_size]) carries the
+    decoded rows of the LRU-hit pages straight from the host cache --
+    hits skip the on-device unpack entirely instead of being re-decoded.
+    Returns ``(words, ids)``: ``uint32[n_words]`` plus the decoded
+    miss-page matrix ``int32[n, page_size]`` (a by-product of the decode
+    -- callers feed it to the decoded-page LRU without a second dispatch;
+    they simply skip the host transfer when no cache is attached).
     """
     n, n_mini = min_deltas.shape
     max_words = packed.shape[1]
+    c = cached.shape[0]
     t = gidx.shape[0]
     kern = functools.partial(_fused_batch_kernel, page_size=page_size,
                              n_words=n_words)
@@ -306,6 +312,7 @@ def fused_decode_bitmap_batch(first, min_deltas, bit_widths, word_offsets,
             pl.BlockSpec((n, n_mini), lambda i: (0, 0)),
             pl.BlockSpec((n, max_words), lambda i: (0, 0)),
             pl.BlockSpec((n, 1), lambda i: (0, 0)),
+            pl.BlockSpec((c, page_size), lambda i: (0, 0)),
             pl.BlockSpec((t,), lambda i: (0,)),
             pl.BlockSpec((1, 1), lambda i: (0, 0)),
         ],
@@ -318,8 +325,8 @@ def fused_decode_bitmap_batch(first, min_deltas, bit_widths, word_offsets,
             jax.ShapeDtypeStruct((n, page_size), jnp.int32),
         ],
         interpret=interpret,
-    )(first, min_deltas, bit_widths, word_offsets, packed, counts, gidx,
-      gcount)
+    )(first, min_deltas, bit_widths, word_offsets, packed, counts, cached,
+      gidx, gcount)
 
 
 @functools.partial(jax.jit,

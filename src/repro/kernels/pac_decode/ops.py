@@ -219,21 +219,23 @@ def decode_row_ranges(col: DeltaColumn, los, his, meter=None,
     return mat[pidx, rows - page_of * ps]
 
 
-def _gather_positions(pages: np.ndarray, los: np.ndarray, his: np.ndarray,
+def _gather_positions(pages: np.ndarray, base_of_page: np.ndarray,
+                      los: np.ndarray, his: np.ndarray,
                       page_size: int) -> Tuple[np.ndarray, int]:
-    """Flat (block_row * page_size + offset) position of every requested
-    row, zero-padded to a power of two.
+    """Flat (row * page_size + offset) position of every requested row,
+    zero-padded to a power of two.
 
     These are row *positions* (derivable from the <offset> index alone),
     not decoded ids -- the host addresses the requested rows inside the
-    kernel's decoded page matrix without ever materializing the
+    kernel's [miss | cached] row order (``base_of_page[i]`` is the matrix
+    row holding sorted page ``pages[i]``) without ever materializing the
     concatenated id list.  Returns ``(int32[t], total)``.
     """
     rows = intervals_to_ids((los, his))
     total = len(rows)
     page_of = rows // page_size
     pidx = np.searchsorted(pages, page_of)
-    gidx = (pidx * page_size + (rows - page_of * page_size)) \
+    gidx = (base_of_page[pidx] * page_size + (rows - page_of * page_size)) \
         .astype(np.int32)
     pad = _next_pow2(total) - total
     if pad:
@@ -243,14 +245,19 @@ def _gather_positions(pages: np.ndarray, los: np.ndarray, his: np.ndarray,
 
 def _retrieve_pac_batch_fused(col: DeltaColumn, los, his,
                               target_page_size: int, num_targets: int,
-                              meter, engine: str) -> PAC:
+                              meter, engine: str, filter_plan=None) -> PAC:
     """Fused path: one dispatch from packed pages to target bitmap planes.
 
     The decoded ids stay on the device; the host receives only the dense
     bitmap (``PAC.from_dense_bitmap`` keeps the non-empty planes).  With a
-    decoded-page LRU attached, hits are not re-charged and the kernel's
-    by-product page matrix backfills the cache for the miss pages (the one
-    case where the matrix is pulled to the host).
+    decoded-page LRU attached, only the **miss** pages are shipped packed
+    and unpacked on device -- hit pages' decoded rows are fed back in as
+    the kernel's ``cached`` input, skipping their unpack entirely -- and
+    the kernel's by-product miss matrix backfills the cache (the one case
+    where the matrix is pulled to the host).  With ``filter_plan`` (a
+    :class:`repro.kernels.label_filter.ops.FilterPlan` over the target
+    vertex table) the label-predicate bitmap is evaluated and ANDed into
+    the rank-lookup inside the same dispatch.
     """
     ps = col.page_size
     pages, _ = page_set_for_ranges(los, his, ps)
@@ -258,42 +265,63 @@ def _retrieve_pac_batch_fused(col: DeltaColumn, los, his,
         return PAC(target_page_size)
     cache = col.page_cache
     if cache is None:
-        miss = [int(p) for p in pages]
+        hits, miss = {}, [int(p) for p in pages]
     else:
-        _, miss = cache.split(pages)
+        hits, miss = cache.split(pages)
     _charge_pages(col, miss, meter)
-    gidx, total = _gather_positions(pages, los, his, ps)
-    args = pack_page_list(col, pages)
-    n = len(pages)
-    pad = _next_pow2(n) - n
-    if pad:
+    m = len(miss)
+    m_pad = _next_pow2(m)
+    args = pack_page_list(col, miss)
+    if m_pad - m:
         args = tuple(np.concatenate(
-            [a, np.zeros((pad,) + a.shape[1:], a.dtype)]) for a in args)
+            [a, np.zeros((m_pad - m,) + a.shape[1:], a.dtype)])
+            for a in args)
+    hit_list = [int(p) for p in pages if int(p) in hits]
+    cached = np.zeros((_next_pow2(len(hit_list)), ps), np.int32)
+    for i, p in enumerate(hit_list):
+        d = hits[p]
+        cached[i, :len(d)] = d
+    # matrix row of each sorted page: misses first, then cached rows
+    miss_set = set(miss)
+    is_miss = np.fromiter((int(p) in miss_set for p in pages), bool,
+                          len(pages))
+    base_of_page = np.where(is_miss, np.cumsum(is_miss) - 1,
+                            m_pad + np.cumsum(~is_miss) - 1)
+    gidx, total = _gather_positions(pages, base_of_page, los, his, ps)
     n_words = -(-num_targets // 32)
     jargs = [jnp.asarray(a) for a in args] \
-        + [jnp.asarray(gidx), jnp.full((1, 1), total, np.int32)]
-    if engine == "pallas":
-        words, ids = K.fused_decode_bitmap_batch(*jargs, page_size=ps,
-                                                 n_words=n_words)
-    elif engine == "jax":
-        words, ids = R.fused_batch_ref(*jargs, page_size=ps,
-                                       n_words=n_words)
-    else:
+        + [jnp.asarray(cached), jnp.asarray(gidx),
+           jnp.full((1, 1), total, np.int32)]
+    if engine not in ("jax", "pallas"):
         raise ValueError(f"fused path requires a kernel engine, not "
                          f"{engine!r}")
+    if filter_plan is None:
+        if engine == "pallas":
+            words, ids = K.fused_decode_bitmap_batch(*jargs, page_size=ps,
+                                                     n_words=n_words)
+        else:
+            words, ids = R.fused_batch_ref(*jargs, page_size=ps,
+                                           n_words=n_words)
+    else:
+        from repro.kernels.label_filter import kernel as LK
+        from repro.kernels.label_filter import ref as LR
+        fargs = [jnp.asarray(filter_plan.pos), jnp.asarray(filter_plan.meta)]
+        fn = (LK.fused_decode_filter_bitmap_batch if engine == "pallas"
+              else LR.fused_filter_batch_ref)
+        words, ids = fn(*jargs, *fargs, page_size=ps, n_words=n_words,
+                        ops=filter_plan.program.ops)
     if cache is not None and miss:
         mat = np.asarray(ids, np.int64)
-        pos = {int(p): i for i, p in enumerate(pages)}
-        for p in miss:
-            cnt = col.pages[p].count
-            cache.put(p, mat[pos[p], :cnt].copy())
+        for i, p in enumerate(miss):
+            cache.put(p, mat[i, :col.pages[p].count].copy())
     return PAC.from_dense_bitmap(np.asarray(words), target_page_size)
 
 
 def retrieve_pac_batch(col: DeltaColumn, los, his, target_page_size: int,
                        meter=None, engine: str = "pallas",
                        num_targets: Optional[int] = None,
-                       fused: Optional[bool] = None) -> PAC:
+                       fused: Optional[bool] = None,
+                       label_filter=None) -> PAC:
     """Batched Definition 2: many row ranges -> one merged (unioned) PAC.
 
     Kernel engines take the fused decode->bitmap path whenever the target
@@ -303,6 +331,14 @@ def retrieve_pac_batch(col: DeltaColumn, los, his, target_page_size: int,
     which is O(neighbors) and faster there -- see bench_batch_scaling);
     ``fused`` forces the choice either way (the host path -- decode +
     ``PAC.from_ids`` -- is kept as the oracle and numpy route).
+
+    ``label_filter`` (:class:`repro.core.labels.LabelFilter` over the
+    target vertex table) pushes a label predicate down: the fused path
+    ANDs the predicate bitmap inside the kernel dispatch; the host path
+    intersects with the host-evaluated filter PAC (the oracle).  Label
+    metadata I/O is the caller's to charge (see
+    ``neighbor.retrieve_neighbors_batch``), keeping accounting identical
+    on every path.
     """
     los = np.asarray(los, np.int64)
     his = np.asarray(his, np.int64)
@@ -313,12 +349,23 @@ def retrieve_pac_batch(col: DeltaColumn, los, his, target_page_size: int,
     if fused:
         if num_targets is None:
             raise ValueError("fused=True requires num_targets")
+        plan = None
+        if label_filter is not None:
+            plan = label_filter.plan()
+            if plan.count != int(num_targets):
+                raise ValueError(
+                    f"filter covers {plan.count} vertices but the target "
+                    f"id space has {num_targets}")
         return _retrieve_pac_batch_fused(col, los, his, target_page_size,
-                                         int(num_targets), meter, engine)
+                                         int(num_targets), meter, engine,
+                                         plan)
     ids = decode_row_ranges(col, los, his, meter, engine)
     if ids.size == 0:
         return PAC(target_page_size)
-    return PAC.from_ids(np.unique(ids), target_page_size)
+    pac = PAC.from_ids(np.unique(ids), target_page_size)
+    if label_filter is not None:
+        pac = pac.intersect(label_filter.pac(target_page_size))
+    return pac
 
 
 def retrieve_pac(col: DeltaColumn, lo: int, hi: int, target_page_size: int,

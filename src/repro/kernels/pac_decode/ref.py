@@ -56,10 +56,12 @@ def bitmap_ref(ids, count, base, n_words: int):
 
 @functools.partial(jax.jit, static_argnames=("page_size", "n_words"))
 def fused_batch_ref(first, min_deltas, bit_widths, word_offsets, packed,
-                    counts, gidx, gcount, page_size: int, n_words: int):
+                    counts, cached, gidx, gcount, page_size: int,
+                    n_words: int):
     """jnp reference of ``fused_decode_bitmap_batch`` (same outputs).
 
-    Decode goes through the vmapped per-page oracle; the bitmap tail is
+    Decode goes through the vmapped per-page oracle (miss pages only --
+    LRU-hit rows arrive pre-decoded in ``cached``); the bitmap tail is
     the shared rank-lookup (validated against the numpy PAC oracle in
     tests, which is the ground truth for both engines).
     """
@@ -67,7 +69,8 @@ def fused_batch_ref(first, min_deltas, bit_widths, word_offsets, packed,
     ids = decode_pages_ref(first, min_deltas, bit_widths, word_offsets,
                            packed, counts, page_size)
     ids = ids.astype(jnp.int32)
-    words = _bitmap_from_gather(ids, gidx, gcount[0, 0], page_size, n_words)
+    full = jnp.concatenate([ids, cached], axis=0)
+    words = _bitmap_from_gather(full, gidx, gcount[0, 0], page_size, n_words)
     return words, ids
 
 

@@ -26,6 +26,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core.edge import AdjacencyTable
+from repro.core.labels import Cond, LabelFilter
 from repro.core.neighbor import decode_edge_ranges
 from repro.core.page_cache import DecodedPageCache, attach_page_cache
 from repro.core.table import DeltaIntColumn, TokensColumn
@@ -38,12 +39,23 @@ class GraphRetriever:
     seed vertices, one multi-range decode of the adjacency value column
     (cache-miss pages only, once the LRU is warm), one batched read of the
     unique neighbors' token lists, then a cheap per-request assembly.
+
+    Label-scoped retrieval (PR 3): with ``filter_cond`` (a label
+    :class:`~repro.core.labels.Cond` over ``filter_vt``, the value-side
+    vertex table) only neighbors satisfying the predicate contribute
+    context.  The predicate compiles once into the filtering plane; its
+    whole-table bitmap is evaluated on the configured engine at first use,
+    cached across ticks (label columns are immutable; the metadata I/O is
+    charged once, mirroring the decoded-page LRU's miss-only convention),
+    and each tick's decoded neighbors are masked by a vectorized bitmap
+    probe.  ``stats()`` reports considered/kept counters.
     """
 
     def __init__(self, adj: AdjacencyTable, tokens_col: TokensColumn,
                  max_neighbors: int = 2, tokens_per_neighbor: int = 16,
                  meter=None, engine: str = "numpy",
-                 page_cache_pages: Optional[int] = 256):
+                 page_cache_pages: Optional[int] = 256,
+                 filter_vt=None, filter_cond: Optional[Cond] = None):
         self.adj = adj
         self.tokens_col = tokens_col
         self.max_neighbors = max_neighbors
@@ -52,6 +64,14 @@ class GraphRetriever:
         self.engine = engine
         self.calls = 0          # batched retrievals issued (one per tick)
         self.vertices_seen = 0  # requests served across all calls
+        if filter_cond is not None and filter_vt is None:
+            raise ValueError("filter_cond requires filter_vt (the "
+                             "value-side vertex table)")
+        self.label_filter = (LabelFilter(filter_vt, filter_cond)
+                             if filter_cond is not None else None)
+        self._filter_charged = False
+        self.filter_considered = 0  # neighbors decoded while filtering
+        self.filter_kept = 0        # neighbors that passed the predicate
         col = adj.table[adj.value_col]
         self._cache_col = col if isinstance(col, DeltaIntColumn) else None
         if self._cache_col is not None:
@@ -83,6 +103,18 @@ class GraphRetriever:
         nbrs = decode_edge_ranges(self.adj, los, his, self.meter,
                                   self.engine)
         lengths = np.maximum(his - los, 0)
+        if self.label_filter is not None and nbrs.size:
+            if not self._filter_charged:
+                # charged once: the bitmap is evaluated at first use and
+                # cached across ticks (miss-only convention, like the LRU)
+                self.label_filter.charge(self.meter)
+                self._filter_charged = True
+            keep = self.label_filter.mask_ids(nbrs, self.engine)
+            self.filter_considered += int(nbrs.size)
+            self.filter_kept += int(keep.sum())
+            seg = np.repeat(np.arange(lengths.size), lengths)
+            nbrs = nbrs[keep]
+            lengths = np.bincount(seg[keep], minlength=lengths.size)
         if nbrs.size:
             # fetch each unique neighbor's tokens once for the whole tick
             uniq, inv = np.unique(nbrs, return_inverse=True)
@@ -107,4 +139,8 @@ class GraphRetriever:
                                 "vertices_seen": self.vertices_seen}
         if self.page_cache is not None:
             s["page_cache"] = self.page_cache.stats()
+        if self.label_filter is not None:
+            s["filter"] = {"cond": repr(self.label_filter.cond),
+                           "considered": self.filter_considered,
+                           "kept": self.filter_kept}
         return s

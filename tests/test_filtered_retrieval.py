@@ -1,0 +1,208 @@
+"""Predicate-pushdown batched retrieval + batched multi-property gather.
+
+The fused filtered path ("neighbors of batch B having label L" in one
+kernel dispatch) must match the host filter-then-intersect oracle
+bit-for-bit on ids AND on IOMeter bytes/requests, across engines, with and
+without the decoded-page LRU.  The LRU feed-back is pinned by poisoning
+the cache: the kernel must consume the host-fed rows, not re-decode.
+"""
+import numpy as np
+import pytest
+
+from _engines import engines
+from repro.core import (BY_SRC, ENC_GRAPHAR, IOMeter, L, LabelFilter, PAC,
+                        attach_page_cache, build_adjacency,
+                        fetch_properties, fetch_properties_batch,
+                        retrieve_neighbors_batch)
+from repro.core.schema import PropertySchema, VertexTypeSchema
+from repro.core.vertex import VertexTable
+from repro.data.synthetic import clustered_labels, powerlaw_graph
+
+N = 2000
+PAGE = 256
+TPS = 512  # target page size
+LABELS = ["A", "B", "Z"]
+
+
+@pytest.fixture(scope="module")
+def adj():
+    src, dst = powerlaw_graph(N, 6, seed=13)
+    return build_adjacency(src, dst, N + 8, N, BY_SRC, ENC_GRAPHAR,
+                           page_size=PAGE)
+
+
+@pytest.fixture(scope="module")
+def vt():
+    rng = np.random.default_rng(7)
+    labels = clustered_labels(N, ["A", "B"], density=0.3, run_scale=64,
+                              seed=5)
+    labels["Z"] = np.zeros(N, bool)            # a label nobody carries
+    return VertexTable.build(
+        VertexTypeSchema("v", [PropertySchema("x", "int64"),
+                               PropertySchema("y", "int64"),
+                               PropertySchema("w", "float64")],
+                         labels=LABELS, page_size=PAGE),
+        {"x": rng.integers(0, 1000, N), "y": rng.integers(0, 1000, N),
+         "w": rng.random(N)}, labels, num_vertices=N)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    rng = np.random.default_rng(17)
+    vs = rng.integers(0, N, 64)
+    return np.concatenate([vs, vs[:9], np.arange(N, N + 8)])
+
+
+CONDS = [L("A"), L("A") & ~L("B"), (L("A") & ~L("B")) | L("B")]
+
+
+def _oracle(adj, batch, filt):
+    pac = retrieve_neighbors_batch(adj, batch, TPS)
+    return pac.intersect(filt.pac(TPS))
+
+
+@pytest.mark.parametrize("engine", engines(kernel_only=True))
+@pytest.mark.parametrize("cond", CONDS, ids=[repr(c) for c in CONDS])
+def test_fused_filter_matches_host_oracle(adj, vt, batch, cond, engine):
+    filt = LabelFilter(vt, cond)
+    fused = retrieve_neighbors_batch(adj, batch, TPS, engine=engine,
+                                     fused=True, filter=filt)
+    host = retrieve_neighbors_batch(adj, batch, TPS, engine=engine,
+                                    fused=False, filter=filt)
+    want = _oracle(adj, batch, filt)
+    assert fused == host == want
+    np.testing.assert_array_equal(fused.to_ids(), want.to_ids())
+
+
+@pytest.mark.parametrize("engine", engines())
+def test_filter_meter_identical_across_paths(adj, vt, batch, engine):
+    filt = LabelFilter(vt, CONDS[1])
+    m_np = IOMeter()
+    want = retrieve_neighbors_batch(adj, batch, TPS, m_np, engine="numpy",
+                                    filter=filt)
+    for fused in ([None] if engine == "numpy" else [True, False]):
+        m = IOMeter()
+        got = retrieve_neighbors_batch(adj, batch, TPS, m, engine=engine,
+                                       fused=fused, filter=filt)
+        assert got == want
+        assert (m.nbytes, m.nrequests) == (m_np.nbytes, m_np.nrequests)
+
+
+@pytest.mark.parametrize("engine", engines(kernel_only=True))
+def test_fused_filter_empty_label(adj, vt, batch, engine):
+    # the all-false label must yield an empty PAC on every path
+    filt = LabelFilter(vt, L("Z"))
+    pac = retrieve_neighbors_batch(adj, batch, TPS, engine=engine,
+                                   fused=True, filter=filt)
+    assert pac.count() == 0 and len(pac) == 0
+    # and an all-true complement returns the unfiltered result
+    full = retrieve_neighbors_batch(adj, batch, TPS, engine=engine,
+                                    fused=True, filter=LabelFilter(vt, ~L("Z")))
+    assert full == retrieve_neighbors_batch(adj, batch, TPS)
+
+
+@pytest.mark.parametrize("engine", engines(kernel_only=True))
+def test_fused_filter_with_warm_cache(adj, vt, batch, engine):
+    col = adj.table["<dst>"]
+    filt = LabelFilter(vt, CONDS[2])
+    want = _oracle(adj, batch, filt)
+    cache = attach_page_cache(col, 4096)
+    try:
+        cache.clear()
+        p_cold = retrieve_neighbors_batch(adj, batch, TPS, engine=engine,
+                                          fused=True, filter=filt)
+        m_warm = IOMeter()
+        p_warm = retrieve_neighbors_batch(adj, batch, TPS, m_warm,
+                                          engine=engine, fused=True,
+                                          filter=filt)
+        assert p_cold == p_warm == want
+        # warm tick pays the <offset> gather + the filter's label metadata
+        m_want = IOMeter()
+        adj.edge_ranges_batch(batch, m_want)
+        filt.charge(m_want)
+        assert (m_warm.nbytes, m_warm.nrequests) \
+            == (m_want.nbytes, m_want.nrequests)
+        assert cache.hits > 0
+    finally:
+        col.encoded.page_cache = None
+
+
+@pytest.mark.parametrize("engine", engines(kernel_only=True))
+def test_lru_rows_feed_the_kernel_not_redecoded(adj, batch, engine):
+    """Poison one cached page: the fused kernel must consume the host-fed
+    rows (skipping the on-device unpack for hits), so the poisoned ids
+    must show up in the result."""
+    col = adj.table["<dst>"]
+    cache = attach_page_cache(col, 4096)
+    try:
+        cache.clear()
+        clean = retrieve_neighbors_batch(adj, batch, TPS, engine=engine,
+                                         fused=True)
+        pages = sorted(p for p in cache._pages)
+        victim = pages[0]
+        fake = np.full(col.encoded.pages[victim].count, N - 1, np.int64)
+        cache.put(victim, fake)
+        poisoned = retrieve_neighbors_batch(adj, batch, TPS, engine=engine,
+                                            fused=True)
+        assert poisoned != clean
+        assert int(N - 1) in poisoned.to_ids().tolist()
+    finally:
+        col.encoded.page_cache = None
+
+
+@pytest.mark.parametrize("engine", engines(kernel_only=True))
+def test_partial_cache_mixed_hit_miss(adj, batch, engine):
+    col = adj.table["<dst>"]
+    want = retrieve_neighbors_batch(adj, batch, TPS)
+    cache = attach_page_cache(col, 4096)
+    try:
+        cache.clear()
+        # warm only part of the page set, then retrieve the full batch
+        retrieve_neighbors_batch(adj, batch[:13], TPS, engine=engine,
+                                 fused=True)
+        got = retrieve_neighbors_batch(adj, batch, TPS, engine=engine,
+                                       fused=True)
+        assert got == want
+        assert cache.hits > 0 and cache.misses > 0
+    finally:
+        col.encoded.page_cache = None
+
+
+def test_filter_requires_matching_target_space(adj, batch):
+    small_vt = VertexTable.build(
+        VertexTypeSchema("w", [], labels=["Q"], page_size=PAGE),
+        {}, {"Q": np.ones(100, bool)}, num_vertices=100)
+    with pytest.raises(ValueError):
+        retrieve_neighbors_batch(adj, batch, TPS, engine="pallas",
+                                 fused=True, filter=LabelFilter(small_vt,
+                                                                L("Q")))
+
+
+# ----------------------------- multi-property gather ----------------------
+
+def test_multi_property_gather_matches_per_column_loop(adj, vt, batch):
+    pac = retrieve_neighbors_batch(adj, batch, PAGE)
+    m_batch, m_loop = IOMeter(), IOMeter()
+    got = fetch_properties_batch(pac, vt, ["x", "y", "w"], m_batch)
+    assert list(got) == ["x", "y", "w"]
+    for name in ("x", "y", "w"):
+        want = fetch_properties(pac, vt, name, m_loop)
+        np.testing.assert_array_equal(got[name], want)
+    assert (m_batch.nbytes, m_batch.nrequests) \
+        == (m_loop.nbytes, m_loop.nrequests)
+
+
+def test_multi_property_gather_empty_pac(vt):
+    out = fetch_properties_batch(PAC(PAGE), vt, ["x", "w"])
+    assert out["x"].size == 0 and out["w"].size == 0
+
+
+def test_multi_property_gather_over_filtered_pac(adj, vt, batch):
+    filt = LabelFilter(vt, L("A"))
+    pac = retrieve_neighbors_batch(adj, batch, PAGE, filter=filt)
+    got = fetch_properties_batch(pac, vt, ["x", "y"])
+    ids = pac.to_ids()
+    np.testing.assert_array_equal(got["x"],
+                                  vt.table["x"].values[ids])
+    np.testing.assert_array_equal(got["y"],
+                                  vt.table["y"].values[ids])

@@ -1,0 +1,203 @@
+"""The filtering plane: compiled Cond programs vs the legacy oracle.
+
+Deterministic tests pin the compiled stack-machine plane (numpy run-merge
+engine + jax/pallas bitmap kernels) to the legacy per-node ``evaluate(env)``
+recursion, including IOMeter identity across engines.  The hypothesis
+tests assert the Cond algebra -- De Morgan, double negation, and-or
+distribution -- holds between the compiled kernel plane and the oracle for
+randomly generated label columns and condition trees.
+"""
+import numpy as np
+import pytest
+
+from _engines import engines
+from _hypothesis_shim import given, settings, st
+
+from repro.core import (IOMeter, L, LabelFilter, bitmap_to_intervals,
+                        compile_cond, complex_filter_intervals, eval_program,
+                        evaluate_filter_intervals, filter_rle_interval,
+                        intervals_to_bitmap, intervals_to_ids)
+from repro.core.schema import VertexTypeSchema
+from repro.core.vertex import VertexTable
+from repro.kernels.label_filter import ops as lf_ops
+
+NAMES = ("A", "B", "C")
+N = 4000
+
+
+def make_vt(n=N, seed=0, run=64, page_size=256):
+    rng = np.random.default_rng(seed)
+    cols = {m: np.repeat(rng.random(n // run + 1) < 0.4, run)[:n]
+            for m in NAMES}
+    return VertexTable.build(
+        VertexTypeSchema("v", [], labels=list(NAMES), page_size=page_size),
+        {}, cols, num_vertices=n)
+
+
+@pytest.fixture(scope="module")
+def vt():
+    return make_vt()
+
+
+CONDS = [
+    L("A"),
+    ~L("B"),
+    L("A") & L("B"),
+    L("A") | ~L("C"),
+    (L("A") & ~L("B")) | L("C"),
+    ~(L("A") | L("B")) & L("C"),
+    ~~L("C") | (L("A") & L("A")),
+]
+
+
+def _random_cond(rng, depth=3):
+    if depth == 0 or rng.random() < 0.3:
+        return L(NAMES[int(rng.integers(len(NAMES)))])
+    k = int(rng.integers(3))
+    if k == 0:
+        return ~_random_cond(rng, depth - 1)
+    a = _random_cond(rng, depth - 1)
+    b = _random_cond(rng, depth - 1)
+    return (a & b) if k == 1 else (a | b)
+
+
+# ----------------------------- compilation --------------------------------
+
+def test_compile_dedups_labels_and_is_postfix():
+    prog = compile_cond((L("A") & ~L("B")) | (L("A") & L("C")))
+    assert prog.labels == ("A", "B", "C")      # first-use order, deduped
+    # postfix evaluation over plain numpy bool planes
+    out = eval_program(prog.ops, [np.array([1, 0, 0], bool),
+                                  np.array([0, 0, 0], bool),
+                                  np.array([0, 1, 0], bool)])
+    np.testing.assert_array_equal(out, [True, False, False])
+
+
+def test_compile_rejects_foreign_nodes():
+    with pytest.raises(TypeError):
+        compile_cond("not a cond")
+
+
+def test_eval_program_rejects_malformed():
+    with pytest.raises(ValueError):
+        eval_program((("leaf", 0), ("leaf", 0)), [np.ones(2, bool)])
+
+
+@pytest.mark.parametrize("cond", CONDS, ids=[repr(c) for c in CONDS])
+def test_compiled_plane_matches_legacy_oracle(vt, cond):
+    got = complex_filter_intervals(vt, cond)
+    want = evaluate_filter_intervals(vt, cond)
+    np.testing.assert_array_equal(got[0], want[0])
+    np.testing.assert_array_equal(got[1], want[1])
+
+
+# ----------------------------- engine dispatch ----------------------------
+
+@pytest.mark.parametrize("engine", engines())
+@pytest.mark.parametrize("cond", CONDS[:5], ids=[repr(c) for c in CONDS[:5]])
+def test_engine_bitmap_matches_oracle(vt, cond, engine):
+    want = intervals_to_bitmap(evaluate_filter_intervals(vt, cond),
+                               vt.num_vertices)
+    got = lf_ops.label_filter_bitmap(vt, cond, engine=engine)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("engine", engines())
+def test_engine_intervals_and_meter_identical(vt, engine):
+    cond = (L("A") & ~L("B")) | L("C")
+    m_np, m_e = IOMeter(), IOMeter()
+    want = filter_rle_interval(vt, cond, m_np, engine="numpy")
+    got = filter_rle_interval(vt, cond, m_e, engine=engine)
+    np.testing.assert_array_equal(got[0], want[0])
+    np.testing.assert_array_equal(got[1], want[1])
+    assert (m_e.nbytes, m_e.nrequests) == (m_np.nbytes, m_np.nrequests)
+
+
+@pytest.mark.parametrize("engine", engines())
+def test_simple_condition_engine_paths_agree(vt, engine):
+    for cond in (L("B"), ~L("A")):
+        got = filter_rle_interval(vt, cond, engine=engine)
+        want = filter_rle_interval(vt, cond, engine="numpy")
+        np.testing.assert_array_equal(intervals_to_ids(got),
+                                      intervals_to_ids(want))
+
+
+def test_label_filter_caches_bitmap_and_masks(vt):
+    f = LabelFilter(vt, L("A") | L("B"))
+    w1 = f.bitmap()
+    assert f.bitmap() is w1                     # cached per engine
+    ids = intervals_to_ids(evaluate_filter_intervals(vt, f.cond))
+    np.testing.assert_array_equal(
+        np.flatnonzero(f.mask_ids(np.arange(vt.num_vertices))), ids)
+
+
+# ----------------------------- plane conversions --------------------------
+
+@pytest.mark.parametrize("n", [0, 1, 31, 32, 1000, N])
+def test_interval_bitmap_roundtrip(n):
+    rng = np.random.default_rng(n)
+    cut = np.unique(rng.integers(0, max(n, 1), 12))
+    starts, ends = cut[:-1:2], cut[1::2]
+    k = min(len(starts), len(ends))
+    iv = (starts[:k].astype(np.int64), ends[:k].astype(np.int64))
+    words = intervals_to_bitmap(iv, n)
+    assert words.size == -(-n // 32)
+    back = bitmap_to_intervals(words, n)
+    np.testing.assert_array_equal(intervals_to_ids(back),
+                                  intervals_to_ids(iv))
+
+
+# ----------------------------- Cond algebra (hypothesis) ------------------
+
+def _assert_equiv(vt, lhs, rhs, engine):
+    """lhs and rhs must produce identical planes, both equal to the legacy
+    oracle of lhs."""
+    a = lf_ops.label_filter_bitmap(vt, lhs, engine=engine)
+    b = lf_ops.label_filter_bitmap(vt, rhs, engine=engine)
+    want = intervals_to_bitmap(evaluate_filter_intervals(vt, lhs),
+                               vt.num_vertices)
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(a, want)
+
+
+@given(seed=st.integers(0, 2**32 - 1))
+@settings(max_examples=8, deadline=None)
+def test_algebra_de_morgan(seed):
+    rng = np.random.default_rng(seed)
+    vt = make_vt(n=int(rng.integers(64, 1500)), seed=seed, run=16)
+    a, b = _random_cond(rng, 2), _random_cond(rng, 2)
+    for engine in engines():
+        _assert_equiv(vt, ~(a & b), ~a | ~b, engine)
+        _assert_equiv(vt, ~(a | b), ~a & ~b, engine)
+
+
+@given(seed=st.integers(0, 2**32 - 1))
+@settings(max_examples=8, deadline=None)
+def test_algebra_double_negation(seed):
+    rng = np.random.default_rng(seed)
+    vt = make_vt(n=int(rng.integers(64, 1500)), seed=seed, run=16)
+    a = _random_cond(rng, 3)
+    for engine in engines():
+        _assert_equiv(vt, ~~a, a, engine)
+
+
+@given(seed=st.integers(0, 2**32 - 1))
+@settings(max_examples=8, deadline=None)
+def test_algebra_and_or_distribution(seed):
+    rng = np.random.default_rng(seed)
+    vt = make_vt(n=int(rng.integers(64, 1500)), seed=seed, run=16)
+    a, b, c = (_random_cond(rng, 1) for _ in range(3))
+    for engine in engines():
+        _assert_equiv(vt, a & (b | c), (a & b) | (a & c), engine)
+
+
+@given(seed=st.integers(0, 2**32 - 1))
+@settings(max_examples=10, deadline=None)
+def test_compiled_matches_oracle_fuzz(seed):
+    rng = np.random.default_rng(seed)
+    vt = make_vt(n=int(rng.integers(33, 2000)), seed=seed, run=8)
+    cond = _random_cond(rng, 4)
+    got = complex_filter_intervals(vt, cond)
+    want = evaluate_filter_intervals(vt, cond)
+    np.testing.assert_array_equal(got[0], want[0])
+    np.testing.assert_array_equal(got[1], want[1])

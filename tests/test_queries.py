@@ -53,11 +53,26 @@ def test_ic8_equivalence(snb, g, base):
         np.testing.assert_array_equal(d1, d2)
 
 
+def test_ic8_label_pushdown_equivalence(snb, g, base):
+    # reply_label pushes the predicate into the hop-2 batched retrieval;
+    # every engine must agree with the string-label acero baseline
+    from _engines import engines
+    creators = np.unique(snb.has_creator_person)
+    p = int(creators[len(creators) // 3])
+    r2, d2 = ic8_acero(base, p, reply_label="TagClass1")
+    for engine in engines():
+        r1, d1 = ic8_graphar(g, p, engine=engine, reply_label="TagClass1")
+        np.testing.assert_array_equal(r1, r2)
+        np.testing.assert_array_equal(d1, d2)
+
+
 def test_bi2_equivalence(snb, g, base):
+    from _engines import engines
     for cls in ["TagClass0", "TagClass3"]:
-        c1 = bi2_graphar(g, cls)
         c2 = bi2_acero(base, cls)
-        assert c1 == c2
+        for engine in engines():
+            c1 = bi2_graphar(g, cls, engine=engine)
+            assert c1 == c2
 
 
 def test_bi2_io_advantage(snb, g, base):

@@ -18,7 +18,7 @@ def engine_parts():
 
 
 @pytest.fixture(scope="module")
-def doc_lake():
+def doc_graph():
     lake = document_graph(num_docs=400, vocab=512, mean_len=32, seed=5)
     b = GraphArBuilder("docs")
     b.add_vertices(
@@ -27,7 +27,12 @@ def doc_lake():
         {"tokens": lake.tokens}, lake.labels)
     b.add_edges(EdgeTypeSchema("doc", "links", "doc", page_size=128),
                 lake.links_src, lake.links_dst)
-    g = b.build()
+    return b.build(), lake
+
+
+@pytest.fixture(scope="module")
+def doc_lake(doc_graph):
+    g, _ = doc_graph
     return g.adjacency("doc-links-doc", BY_SRC), \
         g.vertex("doc").table["tokens"]
 
@@ -123,6 +128,45 @@ def test_retriever_cache_opt_out_detaches(doc_lake):
     assert adj.table[adj.value_col].encoded.page_cache is None
     assert r.page_cache is None
     assert "page_cache" not in r.stats()
+
+
+def test_retriever_label_scoped_context(doc_graph, doc_lake):
+    from repro.core import L
+    g, lake = doc_graph
+    adj, tokens_col = doc_lake
+    vt = g.vertex("doc")
+    r = GraphRetriever(adj, tokens_col, max_neighbors=3,
+                       tokens_per_neighbor=8, page_cache_pages=None,
+                       filter_vt=vt, filter_cond=L("HighQuality"))
+    vs = np.flatnonzero(adj.degrees() > 0)[:16]
+    ctx = r(vs)
+    assert len(ctx) == len(vs)
+    hq = lake.labels["HighQuality"]
+    for v, c in zip(vs, ctx):
+        nbrs = adj.neighbor_ids(int(v))[:3]
+        keep = [int(n) for n in nbrs if hq[int(n)]]
+        want = (np.concatenate([tokens_col.get(n)[:8] for n in keep])
+                if keep else np.zeros(0, np.int32))
+        np.testing.assert_array_equal(c, want.astype(np.int32))
+    s = r.stats()
+    assert s["filter"]["considered"] >= s["filter"]["kept"] > 0
+    # the bitmap is cached across ticks: label metadata charged once
+    from repro.core import IOMeter
+    m = IOMeter()
+    r2 = GraphRetriever(adj, tokens_col, max_neighbors=3, meter=m,
+                        page_cache_pages=None, filter_vt=vt,
+                        filter_cond=L("HighQuality"))
+    r2(vs)
+    first = m.nbytes
+    r2(vs)
+    assert m.nbytes - first < first    # no second label-metadata charge
+
+
+def test_retriever_filter_requires_vt(doc_lake):
+    from repro.core import L
+    adj, tokens_col = doc_lake
+    with pytest.raises(ValueError):
+        GraphRetriever(adj, tokens_col, filter_cond=L("HighQuality"))
 
 
 def test_retriever_stats_track_live_cache(doc_lake):
