@@ -21,7 +21,7 @@ from .neighbor import (decode_edge_ranges, degrees_topk, fetch_properties,
                        retrieve_neighbors_scan)
 from .pac import (PAC, bitmap_to_ids, ids_to_bitmap, pages_union,
                   words_per_page)
-from .page_cache import DecodedPageCache, attach_page_cache
+from .page_cache import DecodedPageCache, attach_page_cache, live_cache
 from .schema import EdgeTypeSchema, GraphSchema, PropertySchema, VertexTypeSchema
 from .storage import ESSD, MEDIA, OSS, TMPFS, GraphStore, IOMeter, MediaModel
 from .table import (BoolPlainColumn, BoolRleColumn, DeltaIntColumn,

@@ -23,7 +23,7 @@ live in ``repro.kernels`` and are validated against these.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 
@@ -39,6 +39,13 @@ ALLOWED_WIDTHS = (0, 1, 2, 4, 8, 16, 32)
 ENC_PLAIN = "plain"
 ENC_DELTA = "delta"
 ENC_RLE = "rle"
+
+#: bit layout of the unpack plan's packed ``pos`` lane (see
+#: :meth:`PackedPages.unpack_plan`): ``widx << 11 | shift << 6 | bw``.
+#: shift < 32 (5 bits), bw <= 32 (6 bits), widx < 2^20 (asserted).
+POS_WIDX_SHIFT = 11
+POS_SHIFT_SHIFT = 6
+POS_BW_MASK = 63
 
 
 # --------------------------------------------------------------------------
@@ -260,6 +267,17 @@ class PackedPages:
     kernels tile over.  Built once per column and cached on
     :class:`DeltaColumn` so repeated queries stop re-materializing the
     batch arrays (a measurable hot-path cost at serving batch rates).
+
+    ``version`` snapshots :attr:`DeltaColumn.version` at build time so a
+    page write invalidates the cache even when the page count is
+    unchanged (in-place mutation of the last partial page).
+
+    :meth:`device` keeps a lazily-populated, engine-keyed **device
+    mirror** of the batch arrays: the packed column is immutable per
+    version, so it crosses the PCIe once and every subsequent dispatch
+    ships only an int32 page-index vector (the kernels gather rows
+    on-device with ``jnp.take``).  The mirror dies with this object, so
+    a version bump (which rebuilds ``PackedPages``) also invalidates it.
     """
 
     first: np.ndarray         # int32  [n_pages, 1]
@@ -268,10 +286,110 @@ class PackedPages:
     word_offsets: np.ndarray  # int32  [n_pages, n_mini]
     packed: np.ndarray        # uint32 [n_pages, max_words]
     counts: np.ndarray        # int32  [n_pages, 1]
+    #: rows per page (max_words == page_size by construction, but kept
+    #: explicit so the unpack plan never guesses).
+    page_size: int = 0
+    #: :attr:`DeltaColumn.version` this build corresponds to.
+    version: int = 0
+    #: engine -> tuple of device arrays; populated lazily, once per engine.
+    _device: Dict[str, Tuple] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+    #: host-cached per-delta unpack plan (see :meth:`unpack_plan`).
+    _plan: "Tuple | None" = dataclasses.field(
+        default=None, repr=False, compare=False)
+    #: engine -> device unpack plan (see :meth:`device_plan`).
+    _device_plans: Dict[str, Tuple] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+    #: host->device transfers performed (one per engine populated).
+    device_transfers: int = dataclasses.field(
+        default=0, repr=False, compare=False)
 
     @property
     def n_pages(self) -> int:
         return self.first.shape[0]
+
+    def host_arrays(self) -> Tuple[np.ndarray, ...]:
+        return (self.first, self.min_deltas, self.bit_widths,
+                self.word_offsets, self.packed, self.counts)
+
+    def device(self, engine: str) -> Tuple:
+        """Engine-keyed device mirror of the whole packed column.
+
+        Populated lazily and exactly once per (column build, engine):
+        repeated calls return the same device arrays.  The transfer is
+        the only time packed page bytes cross to the device -- dispatch
+        paths gather rows on-device by page index afterwards.
+
+        This is the raw storage-layout mirror (the unit a multi-device
+        shard would ship); the decode dispatch paths consume
+        :meth:`device_plan`, its decode-ready expansion, instead -- do
+        not populate both unless you need both.
+        """
+        mirror = self._device.get(engine)
+        if mirror is None:
+            import jax.numpy as jnp  # storage plane stays numpy otherwise
+            mirror = tuple(jnp.asarray(a) for a in self.host_arrays())
+            self._device[engine] = mirror
+            self.device_transfers += 1
+        return mirror
+
+    def unpack_plan(self) -> Tuple[np.ndarray, ...]:
+        """Per-delta unpack plan: everything about the variable-shift
+        decode that does not depend on the query, precomputed once.
+
+        The miniblock metadata (bit width, word offset, min delta) is
+        expanded to per-delta resolution and folded together.  ``pos``
+        packs the word index, within-word shift, and effective bit width
+        of delta ``j`` of page ``i`` into one int32 lane
+        (``widx << POS_WIDX_SHIFT | shift << POS_SHIFT_SHIFT | bw``) --
+        one gathered array instead of three -- and the effective width
+        is already forced to 0 past ``counts[i] - 1`` and for zero-width
+        miniblocks (a zero width decodes a zero mask, so no per-dispatch
+        count compare); ``min_delta`` is zeroed the same way.  A
+        resident dispatch is then one ``take_along_axis`` + a few
+        elementwise ops + row cumsum -- the miniblock-expansion gathers
+        the kernels used to do per dispatch happen here, once per column
+        build.
+
+        Returns ``(first, pos, min_delta, packed)`` with the middle two
+        shaped ``[n_pages, page_size - 1]``.
+        """
+        if self._plan is None:
+            ps = self.page_size or self.packed.shape[1]
+            d = np.arange(max(ps - 1, 1))
+            n_mini = self.bit_widths.shape[1]
+            mini = np.minimum(d // MINIBLOCK, n_mini - 1)
+            within = d % MINIBLOCK
+            bw = self.bit_widths[:, mini].astype(np.int64)
+            bit_pos = within[None, :] * bw
+            widx = (self.word_offsets[:, mini] + bit_pos // 32) \
+                .astype(np.int64)
+            assert widx.size == 0 or int(widx.max()) < (1 << 20), \
+                "word offset overflows the packed position encoding"
+            valid = d[None, :] < (self.counts - 1)
+            bw_eff = np.where(valid, bw, 0)
+            pos = ((widx << POS_WIDX_SHIFT)
+                   | ((bit_pos % 32) << POS_SHIFT_SHIFT)
+                   | bw_eff).astype(np.int32)
+            mind = np.where(valid, self.min_deltas[:, mini], 0) \
+                .astype(np.int32)
+            self._plan = (self.first, pos, mind, self.packed)
+        return self._plan
+
+    def device_plan(self, engine: str) -> Tuple:
+        """Engine-keyed device mirror of the unpack plan (once each)."""
+        plan = self._device_plans.get(engine)
+        if plan is None:
+            import jax.numpy as jnp
+            plan = tuple(jnp.asarray(a) for a in self.unpack_plan())
+            self._device_plans[engine] = plan
+            self.device_transfers += 1
+        return plan
+
+    def device_stats(self) -> Dict[str, object]:
+        return {"engines": sorted(set(self._device) | set(self._device_plans)),
+                "transfers": self.device_transfers,
+                "version": self.version}
 
     def slice(self, p0: int, p1: int) -> Tuple[np.ndarray, ...]:
         """Zero-copy views of pages [p0, p1)."""
@@ -299,9 +417,35 @@ class DeltaColumn:
     #: by every batched decode path, not part of the storage format.
     page_cache: "object | None" = dataclasses.field(
         default=None, repr=False, compare=False)
+    #: monotonically increasing write counter; every derived cache
+    #: (``packed_cache``, its device mirror, the decoded-page LRU) is
+    #: keyed on it, so in-place page writes can never serve stale data.
+    version: int = dataclasses.field(default=0, compare=False)
 
     def nbytes(self) -> int:
         return sum(p.nbytes() for p in self.pages)
+
+    def bump_version(self) -> None:
+        """Mark the pages dirty.  Any code that writes a page in place
+        (or replaces one) MUST call this -- :func:`pack_column` and the
+        decoded-page LRU key their caches on :attr:`version`, and page
+        count alone cannot see a rewrite of the last partial page."""
+        self.version += 1
+
+    def set_page(self, i: int, page: DeltaPage) -> None:
+        """Replace page ``i`` and invalidate every derived cache.
+
+        The row count follows the replacement (rewriting the last
+        partial page may grow or shrink the column)."""
+        self.count += page.count - self.pages[i].count
+        self.pages[i] = page
+        self.bump_version()
+
+    def append_page(self, page: DeltaPage) -> None:
+        """Append a page and invalidate every derived cache."""
+        self.pages.append(page)
+        self.count += page.count
+        self.bump_version()
 
 
 def pack_column(col: DeltaColumn) -> PackedPages:
@@ -309,10 +453,13 @@ def pack_column(col: DeltaColumn) -> PackedPages:
 
     Pads miniblock metadata to ``page_size // MINIBLOCK`` and packed words
     to the worst case (bw=32) -- exactly the layout the pac_decode kernels
-    tile over.
+    tile over.  The cache is keyed on ``(n_pages, version)`` so both
+    appended and in-place-rewritten pages rebuild it (and, transitively,
+    the device mirror that lives on it).
     """
     if col.packed_cache is not None \
-            and col.packed_cache.n_pages == len(col.pages):
+            and col.packed_cache.n_pages == len(col.pages) \
+            and col.packed_cache.version == col.version:
         return col.packed_cache
     ps = col.page_size
     n_mini = max(1, ps // MINIBLOCK)
@@ -332,7 +479,8 @@ def pack_column(col: DeltaColumn) -> PackedPages:
         bw[i, :k] = pg.bit_widths
         woff[i, :k] = pg.word_offsets
         packed[i, :len(pg.packed)] = pg.packed
-    col.packed_cache = PackedPages(first, mind, bw, woff, packed, counts)
+    col.packed_cache = PackedPages(first, mind, bw, woff, packed, counts,
+                                   page_size=ps, version=col.version)
     return col.packed_cache
 
 

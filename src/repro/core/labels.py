@@ -260,7 +260,13 @@ class LabelFilter:
         charge_label_metadata(self.vt, self.program.labels, meter)
 
     def plan(self):
-        """Padded kernel inputs (positions/meta) + program, built once."""
+        """Padded kernel inputs (positions/meta) + program, built once.
+
+        The plan also carries the filtering plane's device residency
+        (``FilterPlan.device`` / ``device_bitmap``): because the plan is
+        cached here for the filter's lifetime, the RLE run arrays and the
+        evaluated predicate bitmap cross to the device once and are
+        reused by every subsequent fused dispatch."""
         if self._plan is None:
             from repro.kernels.label_filter import ops as lf_ops
             self._plan = lf_ops.make_plan(self.vt, self.program)

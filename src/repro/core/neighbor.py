@@ -75,7 +75,8 @@ def retrieve_neighbors_batch(adj: AdjacencyTable, vs,
                              meter=None,
                              engine: str = "numpy",
                              fused: bool | None = None,
-                             filter=None) -> PAC:
+                             filter=None,
+                             resident: bool | None = None) -> PAC:
     """Batched Definition 2: merged PAC of the neighbors of every ``v`` in
     ``vs`` (equal to the union of the per-vertex PACs).
 
@@ -92,7 +93,13 @@ def retrieve_neighbors_batch(adj: AdjacencyTable, vs,
     dispatch (no host round-trip between filtering and retrieval); the
     host path intersects with the host-evaluated filter PAC and serves as
     the oracle.  The filter's label-metadata I/O is charged here, once,
-    identically for every engine/path."""
+    identically for every engine/path.
+
+    ``resident`` selects the fused path's transfer regime: the
+    device-resident column plane (packed pages mirrored on device once,
+    dispatches ship page indices only -- the default, see
+    ``REPRO_DEVICE_RESIDENT``) or the per-dispatch pack path.  Purely a
+    transfer optimization: ids, meters, and PACs are identical."""
     vs = np.asarray(vs, np.int64)
     if engine == "numpy" and fused:
         raise ValueError("fused path requires a kernel engine (jax/pallas)")
@@ -113,7 +120,8 @@ def retrieve_neighbors_batch(adj: AdjacencyTable, vs,
     return pac_ops.retrieve_pac_batch(_kernel_column(adj), los, his,
                                       target_page_size, meter, engine=engine,
                                       num_targets=adj.num_value_vertices,
-                                      fused=fused, label_filter=filter)
+                                      fused=fused, label_filter=filter,
+                                      resident=resident)
 
 
 def retrieve_neighbors(adj: AdjacencyTable, v: int,

@@ -37,6 +37,9 @@ class DecodedPageCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        #: column version the cached decodes correspond to (see
+        #: :func:`live_cache`); bumped columns drop every entry.
+        self.version = 0
 
     # -- access ---------------------------------------------------------------
     def get(self, page: int) -> Optional[np.ndarray]:
@@ -109,7 +112,27 @@ def attach_page_cache(col, capacity: int) -> DecodedPageCache:
     if cache is not None and cache.capacity == capacity:
         return cache
     cache = DecodedPageCache(capacity)
+    cache.version = getattr(enc, "version", 0)
     enc.page_cache = cache
+    return cache
+
+
+def live_cache(col) -> Optional[DecodedPageCache]:
+    """The column's decoded-page LRU, coherent with its current version.
+
+    Every decode path consults the cache through this helper: when the
+    column's write counter moved since the cache last served (an in-place
+    page rewrite -- invisible to the old ``len(pages)`` keying), the
+    stale decodes are dropped wholesale before any probe, so mutation can
+    never serve stale rows.  Returns None when no cache is attached.
+    """
+    cache = getattr(col, "page_cache", None)
+    if cache is None:
+        return None
+    v = getattr(col, "version", 0)
+    if cache.version != v:
+        cache.clear()
+        cache.version = v
     return cache
 
 

@@ -278,8 +278,8 @@ class DeltaIntColumn(Column):
 
     def _decode_pages(self, pages: Sequence[int], meter=None):
         from .encoding import delta_decode_page
-        from .page_cache import miss_runs
-        cache = self.encoded.page_cache
+        from .page_cache import live_cache, miss_runs
+        cache = live_cache(self.encoded)
         if cache is None:
             out, miss = {}, [int(p) for p in pages]
         else:

@@ -32,7 +32,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.labels import eval_program
+from repro.kernels._pad import note_trace
 from repro.kernels.pac_decode.kernel import (_bitmap_from_gather,
+                                             _bitmap_scatter,
+                                             _decode_plan_rows, _gather_rows,
                                              _unpack_and_scan_batch)
 
 WORD_TILE = 64  # words per grid step = 2048 bits
@@ -78,6 +81,7 @@ def cond_bitmap_pallas(pos, meta, n_words: int, ops: Tuple[Tuple, ...],
     """pos int32[k, n_pos] (padded with count), meta int32[k, 2] =
     (first_value, count), ``ops`` the static postfix program.  Returns
     uint32[n_words]."""
+    note_trace("cond_bitmap_pallas")
     assert n_words % WORD_TILE == 0
     k, n_pos = pos.shape
     kern = functools.partial(_cond_kernel, ops=ops)
@@ -132,6 +136,7 @@ def fused_decode_filter_bitmap_batch(first, min_deltas, bit_widths,
     Returns ``(words, ids)`` with ``ids`` the decoded miss-page matrix
     (LRU backfill by-product).
     """
+    note_trace("fused_decode_filter_bitmap_batch")
     n, n_mini = min_deltas.shape
     max_words = packed.shape[1]
     c = cached.shape[0]
@@ -166,3 +171,79 @@ def fused_decode_filter_bitmap_batch(first, min_deltas, bit_widths,
         interpret=interpret,
     )(first, min_deltas, bit_widths, word_offsets, packed, counts, cached,
       gidx, gcount, fpos, fmeta)
+
+
+# --------------------------------------------------------------------------
+# device-resident fused filter: page indices + resident predicate plane
+# --------------------------------------------------------------------------
+
+def _fused_gather_filter_kernel(first_ref, pos_ref, mind_ref, packed_ref,
+                                gidx_ref, gcount_ref, fwords_ref, winit_ref,
+                                words_ref, ids_ref=None,
+                                *, page_size, n_words):
+    del winit_ref  # aliased storage for words_ref; fully overwritten
+    ids = _decode_plan_rows(
+        first_ref[...], pos_ref[...], mind_ref[...], packed_ref[...])
+    if ids_ref is not None:
+        ids_ref[...] = ids
+    nbr = _bitmap_scatter(ids, gidx_ref[...], gcount_ref[0, 0], n_words)
+    words_ref[...] = nbr & fwords_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("page_size", "n_words", "p_pad",
+                                             "want_ids", "interpret"))
+def fused_gather_decode_filter_bitmap_batch(first, pos, mind, packed, staged,
+                                            fwords, words_init,
+                                            page_size: int, n_words: int,
+                                            p_pad: int,
+                                            want_ids: bool = True,
+                                            interpret: bool = True):
+    """Device-resident predicate-pushdown retrieval, one dispatch.
+
+    Same contract as ``pac_decode.kernel.fused_gather_decode_bitmap_batch``
+    (whole-column unpack plan + on-device page gather driven by the
+    one-put ``staged`` index vector, decode matrix emitted only under
+    ``want_ids`` for LRU backfill), with the
+    label plane equally resident: ``fwords`` is the predicate's
+    **device-cached bitmap plane** (``FilterPlan.device_bitmap`` -- built
+    once per (engine, n_words) from the RLE interval lists, label columns
+    are immutable), so the dispatch ships no label bytes and re-evaluates
+    no per-lane binary searches -- the kernel ANDs the resident plane
+    into the neighbor bitmap.  ``words_init`` is aliased to the ``words``
+    output for cross-tick buffer reuse.  Returns ``(words, ids)``
+    (``ids`` in ``idx`` order), or ``words`` alone without ``want_ids``.
+    """
+    note_trace("fused_gather_decode_filter_bitmap_batch")
+    from repro.kernels.pac_decode.kernel import _split_staged
+    idx, gidx, gcount = _split_staged(staged, p_pad)
+    g = _gather_rows(idx, first, pos, mind, packed)
+    n = idx.shape[0]
+    d = pos.shape[1]
+    max_words = packed.shape[1]
+    t = gidx.shape[0]
+    kern = functools.partial(_fused_gather_filter_kernel,
+                             page_size=page_size, n_words=n_words)
+    out_specs = [pl.BlockSpec((n_words,), lambda i: (0,))]
+    out_shape = [jax.ShapeDtypeStruct((n_words,), jnp.uint32)]
+    if want_ids:
+        out_specs.append(pl.BlockSpec((n, page_size), lambda i: (0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((n, page_size), jnp.int32))
+    out = pl.pallas_call(
+        kern,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((n, max_words), lambda i: (0, 0)),
+            pl.BlockSpec((t,), lambda i: (0,)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((n_words,), lambda i: (0,)),
+            pl.BlockSpec((n_words,), lambda i: (0,)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        input_output_aliases={7: 0},
+        interpret=interpret,
+    )(*g, gidx, gcount, fwords, words_init)
+    return tuple(out) if want_ids else out[0]

@@ -15,7 +15,7 @@ bit-for-bit regardless of where the predicate evaluates.
 from __future__ import annotations
 
 import dataclasses
-from typing import Union
+from typing import Dict, Tuple, Union
 
 import numpy as np
 import jax.numpy as jnp
@@ -27,12 +27,15 @@ from repro.core.labels import (Cond, CondProgram, Intervals,
 from repro.core.pac import PAC
 from repro.core.vertex import VertexTable
 
-from repro.kernels.pac_decode.ops import _next_multiple
+from repro.kernels._pad import next_multiple
 
 from . import kernel as K
 from . import ref as R
 
 ENGINES = ("numpy", "jax", "pallas")
+
+# back-compat alias; the canonical helper moved to repro.kernels._pad
+_next_multiple = next_multiple
 
 
 @dataclasses.dataclass
@@ -43,16 +46,58 @@ class FilterPlan:
     ``count`` (the searchsorted sentinel); ``meta[i] = (first_value,
     count)``.  Built once per filter and reused across dispatches (the
     arrays are a few KB -- the whole point of the RLE interval lists).
+
+    Label columns are immutable, so the plan also owns the filtering
+    plane's **device residency**: :meth:`device` mirrors the RLE run
+    arrays on device once per engine (filter dispatches ship no label
+    bytes), and :meth:`device_bitmap` caches the fully evaluated
+    predicate bitmap plane on device per (engine, n_words) -- the
+    resident fused retrieval path ANDs that plane instead of re-running
+    the per-lane run binary searches every dispatch.
     """
 
     program: CondProgram
     pos: np.ndarray    # int32 [k, n_pos]
     meta: np.ndarray   # int32 [k, 2]
     count: int         # number of rows (vertices)
+    #: engine -> (device pos, device meta); populated lazily, once each.
+    _device: Dict[str, Tuple] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+    #: (engine, n_words) -> device uint32[n_words] predicate plane.
+    _device_bitmaps: Dict[Tuple[str, int], object] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     @property
     def n_words(self) -> int:
         return -(-self.count // 32)
+
+    def device(self, engine: str) -> Tuple:
+        """Device mirror of the RLE run arrays (once per engine)."""
+        arrs = self._device.get(engine)
+        if arrs is None:
+            arrs = (jnp.asarray(self.pos), jnp.asarray(self.meta))
+            self._device[engine] = arrs
+        return arrs
+
+    def device_bitmap(self, engine: str, n_words: int):
+        """Device-resident predicate bitmap over ``[0, 32 * n_words)``.
+
+        Evaluated once per (engine, n_words) by the cond kernel over the
+        device-mirrored run arrays (tile-padded, then sliced); lanes past
+        ``count`` are zero, matching the per-dispatch evaluation of the
+        non-resident fused kernel bit for bit.
+        """
+        key = (engine, n_words)
+        words = self._device_bitmaps.get(key)
+        if words is None:
+            pos, meta = self.device(engine)
+            padded = next_multiple(max(n_words, 1), K.WORD_TILE)
+            fn = K.cond_bitmap_pallas if engine == "pallas" \
+                else R.cond_bitmap_ref
+            words = fn(pos, meta, n_words=padded,
+                       ops=self.program.ops)[:n_words]
+            self._device_bitmaps[key] = words
+        return words
 
 
 def make_plan(vt: VertexTable, cond: Union[Cond, CondProgram]) -> FilterPlan:

@@ -28,7 +28,8 @@ Two cross-cutting performance layers (PR 2):
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+import os
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 import jax.numpy as jnp
@@ -36,7 +37,8 @@ import jax.numpy as jnp
 from repro.core.encoding import DeltaColumn, delta_decode_page, pack_column
 from repro.core.labels import intervals_to_ids
 from repro.core.pac import PAC
-from repro.core.page_cache import miss_runs
+from repro.core.page_cache import live_cache, miss_runs
+from repro.kernels._pad import next_multiple, next_pow2, size_class
 
 from . import kernel as K
 from . import ref as R
@@ -46,16 +48,45 @@ ENGINES = ("numpy", "jax", "pallas")
 #: auto-fused threshold: below this many ranges the host path's
 #: O(neighbors) post-processing beats the fused tail's O(num_targets)
 #: bitmap pass (crossover measured in bench_batch_scaling; the win
-#: criterion is batch >= 64, so 16 leaves comfortable margin both ways).
-FUSED_MIN_RANGES = 16
+#: criterion is batch >= 64, so the default of 16 leaves comfortable
+#: margin both ways).  Overridable via ``REPRO_FUSED_MIN_RANGES`` for
+#: bench sweeps of the crossover.
+FUSED_MIN_RANGES = int(os.environ.get("REPRO_FUSED_MIN_RANGES", "16"))
+
+#: device-resident packed column plane (``PackedPages.device``): kernel
+#: engines gather pages on-device by index instead of row-gathering on
+#: the host and re-shipping packed bytes per dispatch.  On by default;
+#: ``REPRO_DEVICE_RESIDENT=0`` restores the per-dispatch pack path
+#: everywhere (the ``resident=`` arguments override per call).
+DEVICE_RESIDENT = os.environ.get("REPRO_DEVICE_RESIDENT", "1") \
+    .strip().lower() not in ("0", "false", "no", "off")
+
+#: pow2 size-class floors for the per-dispatch index/position vectors --
+#: small frontiers share one bucket instead of retracing per shape.
+PAGE_CLASS_MIN = 8
+RANGE_CLASS_MIN = 64
+
+# kept as aliases: the canonical helpers live in repro.kernels._pad now
+_next_multiple = next_multiple
+_next_pow2 = next_pow2
+
+#: (engine, n_words) -> previous dispatch's bitmap plane; handed back to
+#: the resident kernel as its aliased output buffer so steady-state
+#: serving ticks reuse the device allocation instead of growing one per
+#: dispatch (the host copies the plane out before the next dispatch).
+_WORDS_POOL: Dict[Tuple[str, int], object] = {}
 
 
-def _next_multiple(x: int, m: int) -> int:
-    return -(-x // m) * m
+def _words_buffer(engine: str, n_words: int):
+    buf = _WORDS_POOL.get((engine, n_words))
+    if buf is None:
+        buf = jnp.zeros(n_words, jnp.uint32)
+    return buf
 
 
-def _next_pow2(x: int) -> int:
-    return 1 << max(x - 1, 0).bit_length()
+def reset_dispatch_pools() -> None:
+    """Drop pooled device buffers (tests / bench isolation)."""
+    _WORDS_POOL.clear()
 
 
 def pack_pages(col: DeltaColumn, p0: int, p1: int
@@ -99,9 +130,21 @@ def _charge_pages(col: DeltaColumn, pages: Sequence[int], meter) -> None:
                  miss_runs(pages))
 
 
+def _page_index_vector(pages: Sequence[int]) -> np.ndarray:
+    """int32 page-index vector padded to a shared pow2 size class (the
+    only thing the host ships for a resident-column decode)."""
+    idx = np.zeros(size_class(len(pages), PAGE_CLASS_MIN), np.int32)
+    idx[:len(pages)] = pages
+    return idx
+
+
 def _decode_page_matrix(col: DeltaColumn, pages: Sequence[int],
                         engine: str) -> np.ndarray:
-    """Engine dispatch only -- no cache, no metering (see decode_page_list)."""
+    """Engine dispatch only -- no cache, no metering (see decode_page_list).
+
+    Kernel engines follow the ``REPRO_DEVICE_RESIDENT`` default (the
+    per-call ``resident=`` override exists on the fused entry points
+    only)."""
     ps = col.page_size
     n = len(pages)
     if engine == "numpy":
@@ -112,19 +155,34 @@ def _decode_page_matrix(col: DeltaColumn, pages: Sequence[int],
         return out
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; want one of {ENGINES}")
-    args = pack_page_list(col, pages)
-    pad = _next_pow2(n) - n
-    if pad:
-        args = tuple(np.concatenate(
-            [a, np.zeros((pad,) + a.shape[1:], a.dtype)]) for a in args)
-    jargs = [jnp.asarray(a) for a in args]
-    if engine == "pallas":
-        ids = K.delta_decode_pallas(*jargs, page_size=ps)
+    if DEVICE_RESIDENT:
+        # device-resident path: the unpack plan crossed the PCIe once;
+        # the dispatch ships the int32 page-index vector and gathers +
+        # decodes rows on device
+        packed = pack_column(col)
+        plan = packed.device_plan(engine)
+        idx = _page_index_vector(pages)
+        if engine == "pallas":
+            ids = K.gather_decode_pallas(*plan, jnp.asarray(idx),
+                                         page_size=ps)
+        else:
+            ids = R.gather_decode_ref(*plan, jnp.asarray(idx),
+                                      page_size=ps)
+        counts = packed.counts[np.asarray(pages, np.int64), 0]
     else:
-        ids = R.decode_pages_ref(*jargs, page_size=ps)
+        args = pack_page_list(col, pages)
+        pad = _next_pow2(n) - n
+        if pad:
+            args = tuple(np.concatenate(
+                [a, np.zeros((pad,) + a.shape[1:], a.dtype)]) for a in args)
+        jargs = [jnp.asarray(a) for a in args]
+        if engine == "pallas":
+            ids = K.delta_decode_pallas(*jargs, page_size=ps)
+        else:
+            ids = R.decode_pages_ref(*jargs, page_size=ps)
+        counts = args[5][:n, 0]
     ids = np.asarray(ids[:n], np.int64)
     # zero out the padded tail of each page so all engines agree bit-exactly
-    counts = args[5][:n, 0]
     cols = np.arange(ps)[None, :]
     return np.where(cols < counts[:, None], ids, 0)
 
@@ -139,35 +197,44 @@ def decode_page_list(col: DeltaColumn, pages: Sequence[int],
     the jitted kernels retrace O(log n) times, not once per distinct
     frontier size.
 
-    When the column carries a decoded-page LRU (``col.page_cache``), only
-    the cache-miss pages are decoded and IOMeter-charged; hit rows are
-    assembled from the cache and cost no lake I/O.  Without a cache every
-    page is a miss (the pre-LRU accounting, unchanged).
+    When the column carries a decoded-page LRU (``col.page_cache``,
+    consulted through :func:`~repro.core.page_cache.live_cache` so a
+    version-bumped column drops stale decodes first), only the cache-miss
+    pages are decoded and IOMeter-charged; hit rows are assembled from
+    the cache and cost no lake I/O.  Without a cache every page is a miss
+    (the pre-LRU accounting, unchanged).
     """
     ps = col.page_size
     n = len(pages)
     if n == 0:
         return np.zeros((0, ps), np.int64)
-    cache = col.page_cache
+    cache = live_cache(col)
     if cache is None:
         _charge_pages(col, pages, meter)
         return _decode_page_matrix(col, pages, engine)
     hits, miss = cache.split(pages)
     _charge_pages(col, miss, meter)
     out = np.zeros((n, ps), np.int64)
+    pages_arr = np.asarray(pages, np.int64)
     if miss:
         mat = _decode_page_matrix(col, miss, engine)
-        miss_pos = {p: i for i, p in enumerate(miss)}
-        for p in miss:
-            cnt = col.pages[p].count
-            cache.put(p, mat[miss_pos[p], :cnt].copy())
-    for i, p in enumerate(pages):
-        p = int(p)
-        if p in hits:
-            d = hits[p]
-            out[i, :len(d)] = d
-        else:
-            out[i] = mat[miss_pos[p]]
+        # miss preserves the sorted page order, so one fancy-index scatter
+        # places every miss row (no per-row dict lookups)
+        is_miss = np.isin(pages_arr, np.asarray(miss, np.int64))
+        out[np.flatnonzero(is_miss)] = mat
+        for i, p in enumerate(miss):
+            cache.put(p, mat[i, :col.pages[p].count].copy())
+        hit_idx = np.flatnonzero(~is_miss)
+    else:
+        hit_idx = np.arange(n)
+    if hit_idx.size:
+        rows = [hits[int(pages_arr[i])] for i in hit_idx]
+        lens = np.fromiter((len(r) for r in rows), np.int64, len(rows))
+        full = lens == ps
+        if full.any():   # full-width hits stack into one scatter
+            out[hit_idx[full]] = [rows[j] for j in np.flatnonzero(full)]
+        for j in np.flatnonzero(~full):  # at most the last partial page
+            out[hit_idx[j], :lens[j]] = rows[j]
     return out
 
 
@@ -237,7 +304,7 @@ def _gather_positions(pages: np.ndarray, base_of_page: np.ndarray,
     pidx = np.searchsorted(pages, page_of)
     gidx = (base_of_page[pidx] * page_size + (rows - page_of * page_size)) \
         .astype(np.int32)
-    pad = _next_pow2(total) - total
+    pad = size_class(total, RANGE_CLASS_MIN) - total
     if pad:
         gidx = np.concatenate([gidx, np.zeros(pad, np.int32)])
     return gidx, total
@@ -245,30 +312,94 @@ def _gather_positions(pages: np.ndarray, base_of_page: np.ndarray,
 
 def _retrieve_pac_batch_fused(col: DeltaColumn, los, his,
                               target_page_size: int, num_targets: int,
-                              meter, engine: str, filter_plan=None) -> PAC:
+                              meter, engine: str, filter_plan=None,
+                              resident: Optional[bool] = None) -> PAC:
     """Fused path: one dispatch from packed pages to target bitmap planes.
 
     The decoded ids stay on the device; the host receives only the dense
     bitmap (``PAC.from_dense_bitmap`` keeps the non-empty planes).  With a
-    decoded-page LRU attached, only the **miss** pages are shipped packed
-    and unpacked on device -- hit pages' decoded rows are fed back in as
-    the kernel's ``cached`` input, skipping their unpack entirely -- and
-    the kernel's by-product miss matrix backfills the cache (the one case
-    where the matrix is pulled to the host).  With ``filter_plan`` (a
+    decoded-page LRU attached, the IOMeter charges the **miss** pages only
+    (hits are RAM/device-resident, no lake I/O) and the kernel's
+    by-product decode matrix backfills the cache (the one case where the
+    matrix is pulled to the host).  With ``filter_plan`` (a
     :class:`repro.kernels.label_filter.ops.FilterPlan` over the target
-    vertex table) the label-predicate bitmap is evaluated and ANDed into
-    the rank-lookup inside the same dispatch.
+    vertex table) the label-predicate bitmap is ANDed into the rank-lookup
+    inside the same dispatch.
+
+    Two transfer regimes, identical results and accounting:
+
+    * **device-resident** (default): the packed column's device mirror is
+      populated once (``PackedPages.device``); the dispatch ships only the
+      int32 page-index vector + range positions, pages are gathered and
+      decoded on device (LRU hits re-decode there rather than shipping
+      their decoded rows across PCIe), and with a filter the predicate
+      plane comes from the plan's device-cached bitmap -- no label bytes
+      move either.  The bitmap output buffer is reused across dispatches
+      (aliased into the kernel).
+    * **per-dispatch pack** (``resident=False`` /
+      ``REPRO_DEVICE_RESIDENT=0``): the PR 3 path -- miss pages are
+      row-gathered on the host and shipped packed each dispatch, LRU-hit
+      rows are fed in pre-decoded via the ``cached`` input.
     """
     ps = col.page_size
     pages, _ = page_set_for_ranges(los, his, ps)
     if pages.size == 0:
         return PAC(target_page_size)
-    cache = col.page_cache
+    if engine not in ("jax", "pallas"):
+        raise ValueError(f"fused path requires a kernel engine, not "
+                         f"{engine!r}")
+    if resident is None:
+        resident = DEVICE_RESIDENT
+    cache = live_cache(col)
     if cache is None:
         hits, miss = {}, [int(p) for p in pages]
     else:
         hits, miss = cache.split(pages)
     _charge_pages(col, miss, meter)
+    n_words = -(-num_targets // 32)
+    if resident:
+        # rows are in sorted-page order: base_of_page[i] == i
+        gidx, total = _gather_positions(pages, np.arange(len(pages)),
+                                        los, his, ps)
+        plan = pack_column(col).device_plan(engine)
+        # one staging vector [idx | gidx | total] = one device put per
+        # dispatch (three separate puts were a measurable fixed cost)
+        p_pad = size_class(len(pages), PAGE_CLASS_MIN)
+        staged = np.zeros(p_pad + len(gidx) + 1, np.int32)
+        staged[:len(pages)] = pages
+        staged[p_pad:-1] = gidx
+        staged[-1] = total
+        jargs = plan + (jnp.asarray(staged),)
+        # the decode matrix only exists to backfill the LRU: with no
+        # cache -- or a warm one (zero misses) -- the ids never leave
+        # the kernel, skipping the dominant output materialization
+        want_ids = cache is not None and bool(miss)
+        if filter_plan is None:
+            fn = (K.fused_gather_decode_bitmap_batch if engine == "pallas"
+                  else R.fused_gather_batch_ref)
+            out = fn(*jargs, _words_buffer(engine, n_words),
+                     page_size=ps, n_words=n_words, p_pad=p_pad,
+                     want_ids=want_ids)
+        else:
+            from repro.kernels.label_filter import kernel as LK
+            from repro.kernels.label_filter import ref as LR
+            fwords = filter_plan.device_bitmap(engine, n_words)
+            fn = (LK.fused_gather_decode_filter_bitmap_batch
+                  if engine == "pallas" else LR.fused_gather_filter_batch_ref)
+            out = fn(*jargs, fwords, _words_buffer(engine, n_words),
+                     page_size=ps, n_words=n_words, p_pad=p_pad,
+                     want_ids=want_ids)
+        if want_ids:
+            words, ids = out
+            mat = np.asarray(ids, np.int64)
+            pos_of = {int(p): i for i, p in enumerate(pages)}
+            for p in miss:
+                cache.put(p, mat[pos_of[p], :col.pages[p].count].copy())
+        else:
+            words = out
+        host_words = np.asarray(words)
+        _WORDS_POOL[(engine, n_words)] = words  # reuse next dispatch
+        return PAC.from_dense_bitmap(host_words, target_page_size)
     m = len(miss)
     m_pad = _next_pow2(m)
     args = pack_page_list(col, miss)
@@ -288,13 +419,9 @@ def _retrieve_pac_batch_fused(col: DeltaColumn, los, his,
     base_of_page = np.where(is_miss, np.cumsum(is_miss) - 1,
                             m_pad + np.cumsum(~is_miss) - 1)
     gidx, total = _gather_positions(pages, base_of_page, los, his, ps)
-    n_words = -(-num_targets // 32)
     jargs = [jnp.asarray(a) for a in args] \
         + [jnp.asarray(cached), jnp.asarray(gidx),
            jnp.full((1, 1), total, np.int32)]
-    if engine not in ("jax", "pallas"):
-        raise ValueError(f"fused path requires a kernel engine, not "
-                         f"{engine!r}")
     if filter_plan is None:
         if engine == "pallas":
             words, ids = K.fused_decode_bitmap_batch(*jargs, page_size=ps,
@@ -321,7 +448,8 @@ def retrieve_pac_batch(col: DeltaColumn, los, his, target_page_size: int,
                        meter=None, engine: str = "pallas",
                        num_targets: Optional[int] = None,
                        fused: Optional[bool] = None,
-                       label_filter=None) -> PAC:
+                       label_filter=None,
+                       resident: Optional[bool] = None) -> PAC:
     """Batched Definition 2: many row ranges -> one merged (unioned) PAC.
 
     Kernel engines take the fused decode->bitmap path whenever the target
@@ -339,6 +467,11 @@ def retrieve_pac_batch(col: DeltaColumn, los, his, target_page_size: int,
     metadata I/O is the caller's to charge (see
     ``neighbor.retrieve_neighbors_batch``), keeping accounting identical
     on every path.
+
+    ``resident`` picks the fused path's transfer regime (see
+    :func:`_retrieve_pac_batch_fused`); None follows the
+    ``REPRO_DEVICE_RESIDENT`` default.  Residency is purely a transfer
+    optimization -- ids, PAC, and IOMeter are bit-identical either way.
     """
     los = np.asarray(los, np.int64)
     his = np.asarray(his, np.int64)
@@ -358,7 +491,7 @@ def retrieve_pac_batch(col: DeltaColumn, los, his, target_page_size: int,
                     f"id space has {num_targets}")
         return _retrieve_pac_batch_fused(col, los, his, target_page_size,
                                          int(num_targets), meter, engine,
-                                         plan)
+                                         plan, resident=resident)
     ids = decode_row_ranges(col, los, his, meter, engine)
     if ids.size == 0:
         return PAC(target_page_size)

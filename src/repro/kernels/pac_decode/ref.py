@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.encoding import MINIBLOCK
+from repro.kernels._pad import note_trace
 
 
 def decode_pages_ref(first, min_deltas, bit_widths, word_offsets, packed,
@@ -66,12 +67,46 @@ def fused_batch_ref(first, min_deltas, bit_widths, word_offsets, packed,
     tests, which is the ground truth for both engines).
     """
     from .kernel import _bitmap_from_gather
+    note_trace("fused_batch_ref")
     ids = decode_pages_ref(first, min_deltas, bit_widths, word_offsets,
                            packed, counts, page_size)
     ids = ids.astype(jnp.int32)
     full = jnp.concatenate([ids, cached], axis=0)
     words = _bitmap_from_gather(full, gidx, gcount[0, 0], page_size, n_words)
     return words, ids
+
+
+@functools.partial(jax.jit, static_argnames=("page_size",))
+def gather_decode_ref(first, pos, mind, packed, idx, page_size: int):
+    """jnp reference of ``gather_decode_pallas`` (resident-plan gather)."""
+    from .kernel import _decode_plan_rows, _gather_rows
+    note_trace("gather_decode_ref")
+    del page_size  # implied by the plan's per-delta shape
+    g = _gather_rows(idx, first, pos, mind, packed)
+    return _decode_plan_rows(*g)
+
+
+@functools.partial(jax.jit, static_argnames=("page_size", "n_words", "p_pad",
+                                             "want_ids"))
+def fused_gather_batch_ref(first, pos, mind, packed, staged, words_init,
+                           page_size: int, n_words: int, p_pad: int,
+                           want_ids: bool = True):
+    """jnp reference of ``fused_gather_decode_bitmap_batch``.
+
+    ``words_init`` is accepted for signature parity with the pallas
+    entry's aliased output buffer and ignored (XLA allocates here).
+    Without ``want_ids`` only the bitmap is returned (and XLA never
+    materializes the full decode matrix).
+    """
+    from .kernel import (_bitmap_scatter, _decode_plan_rows, _gather_rows,
+                         _split_staged)
+    note_trace("fused_gather_batch_ref")
+    del words_init, page_size
+    idx, gidx, gcount = _split_staged(staged, p_pad)
+    g = _gather_rows(idx, first, pos, mind, packed)
+    ids = _decode_plan_rows(*g)
+    words = _bitmap_scatter(ids, gidx, gcount[0, 0], n_words)
+    return (words, ids) if want_ids else words
 
 
 def fused_ref(first, min_deltas, bit_widths, word_offsets, packed, counts,

@@ -133,12 +133,19 @@ class GraphRetriever:
         return out
 
     def stats(self) -> Dict[str, object]:
-        """Per-tick batching + decoded-page cache counters (for
-        ``ServeEngine.stats()``)."""
+        """Per-tick batching + decoded-page cache + device-mirror
+        counters (for ``ServeEngine.stats()``)."""
         s: Dict[str, object] = {"calls": self.calls,
                                 "vertices_seen": self.vertices_seen}
         if self.page_cache is not None:
             s["page_cache"] = self.page_cache.stats()
+        if self._cache_col is not None:
+            packed = self._cache_col.encoded.packed_cache
+            if packed is not None and packed.device_transfers:
+                # transfers stay at one per engine across ticks: the
+                # packed column crosses to the device once per epoch,
+                # not once per dispatch (kernel engines only)
+                s["device_mirror"] = packed.device_stats()
         if self.label_filter is not None:
             s["filter"] = {"cond": repr(self.label_filter.cond),
                            "considered": self.filter_considered,

@@ -1,0 +1,261 @@
+"""Device-resident column plane: mirror lifecycle, version invalidation,
+bit-identical resident/non-resident results, and zero-retrace dispatch.
+
+Residency is a *transfer* optimization: the packed column crosses to the
+device once per (column build, engine) and every dispatch ships only
+page-index / row-position vectors.  Nothing observable may change --
+ids, PACs, and IOMeter accounting are pinned against both the
+per-dispatch pack path and the numpy oracle.
+"""
+import numpy as np
+import pytest
+
+from _engines import engines
+from repro.core import (BY_SRC, ENC_GRAPHAR, IOMeter, L, LabelFilter, PAC,
+                        attach_page_cache, build_adjacency, pack_column,
+                        retrieve_neighbors_batch)
+from repro.core.encoding import delta_encode_column, delta_encode_page
+from repro.core.page_cache import live_cache
+from repro.data.synthetic import clustered_labels, powerlaw_graph
+from repro.kernels import _pad
+from repro.kernels.pac_decode import ops as pdo
+
+N = 2000
+PAGE = 256
+TPS = 512
+
+
+@pytest.fixture(scope="module")
+def adj():
+    src, dst = powerlaw_graph(N, 6, seed=13)
+    return build_adjacency(src, dst, N, N, BY_SRC, ENC_GRAPHAR,
+                           page_size=PAGE)
+
+
+@pytest.fixture(scope="module")
+def vt():
+    from repro.core.schema import VertexTypeSchema
+    from repro.core.vertex import VertexTable
+    labels = clustered_labels(N, ["A", "B"], density=0.3, run_scale=64,
+                              seed=7)
+    return VertexTable.build(VertexTypeSchema("v", [], labels=["A", "B"]),
+                             {}, labels, num_vertices=N)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    rng = np.random.default_rng(17)
+    return rng.integers(0, N, 64)
+
+
+# ------------------------------ mirror lifecycle ---------------------------
+
+def test_mirror_lazy_once_per_engine():
+    vals = np.sort(np.random.default_rng(0).integers(0, 1 << 20, 4 * PAGE))
+    col = delta_encode_column(vals, PAGE)
+    packed = pack_column(col)
+    assert packed.device_transfers == 0          # lazy: nothing yet
+    m1 = packed.device("jax")
+    assert packed.device_transfers == 1
+    assert packed.device("jax") is m1            # exactly once per engine
+    m2 = packed.device("pallas")
+    assert m2 is not m1
+    assert packed.device_transfers == 2
+    assert packed.device_stats()["engines"] == ["jax", "pallas"]
+    np.testing.assert_array_equal(np.asarray(m1[4]), packed.packed)
+    # the decode-ready unpack plan is mirrored the same way (what the
+    # resident dispatch paths actually consume)
+    p1 = packed.device_plan("jax")
+    assert packed.device_plan("jax") is p1
+    assert packed.device_transfers == 3
+
+
+def test_unpack_plan_decodes_like_the_oracle():
+    from repro.core.encoding import (POS_BW_MASK, POS_SHIFT_SHIFT,
+                                     POS_WIDX_SHIFT, delta_decode_column)
+    vals = np.sort(np.random.default_rng(8).integers(0, 1 << 20,
+                                                     3 * PAGE + 11))
+    col = delta_encode_column(vals, PAGE)
+    first, pos, mind, packed = pack_column(col).unpack_plan()
+    widx = pos >> POS_WIDX_SHIFT
+    shift = ((pos >> POS_SHIFT_SHIFT) & 31).astype(np.uint32)
+    bw = (pos & POS_BW_MASK).astype(np.uint64)
+    mask = ((np.uint64(1) << bw) - 1).astype(np.uint32)
+    mask[bw >= 32] = np.uint32(0xFFFFFFFF)
+    words = np.take_along_axis(packed, widx, axis=1)
+    resid = ((words >> shift) & mask).astype(np.int64)
+    ids = np.concatenate(
+        [np.zeros((len(col.pages), 1), np.int64),
+         np.cumsum(resid + mind, axis=1)], axis=1) + first
+    flat = np.concatenate([ids[i, :p.count]
+                           for i, p in enumerate(col.pages)])
+    np.testing.assert_array_equal(flat, delta_decode_column(col))
+
+
+def test_mirror_invalidated_on_version_bump():
+    vals = np.sort(np.random.default_rng(1).integers(0, 1 << 20,
+                                                     3 * PAGE + 17))
+    col = delta_encode_column(vals, PAGE)
+    packed = pack_column(col)
+    old_mirror = packed.device("jax")
+    # in-place rewrite of the last partial page: page count unchanged
+    new_tail = np.sort(np.random.default_rng(2).integers(0, 1 << 20, 17))
+    col.set_page(len(col.pages) - 1, delta_encode_page(new_tail))
+    repacked = pack_column(col)
+    assert repacked is not packed                # cache keyed on version
+    assert repacked.version == col.version
+    fresh = repacked.device("jax")
+    assert fresh is not old_mirror               # mirror died with the build
+    got = np.asarray(fresh[0][-1, 0])
+    assert got == new_tail[0]
+    fresh_plan = repacked.device_plan("jax")
+    assert np.asarray(fresh_plan[0][-1, 0]) == new_tail[0]
+
+
+# --------------------- staleness regression (satellite) --------------------
+
+@pytest.mark.parametrize("engine", engines())
+def test_in_place_page_write_never_serves_stale(engine):
+    vals = np.sort(np.random.default_rng(3).integers(0, 1 << 20,
+                                                     3 * PAGE + 29))
+    col = delta_encode_column(vals, PAGE)
+    attach_page_cache(col, 64)
+    los = np.array([0, 3 * PAGE])
+    his = np.array([PAGE, 3 * PAGE + 29])
+    before = pdo.decode_row_ranges(col, los, his, engine=engine)
+    new_tail = np.sort(np.random.default_rng(4).integers(0, 1 << 20, 29))
+    col.set_page(3, delta_encode_page(new_tail))
+    after = pdo.decode_row_ranges(col, los, his, engine=engine)
+    np.testing.assert_array_equal(after[:PAGE], before[:PAGE])
+    np.testing.assert_array_equal(after[PAGE:], new_tail)
+    col.page_cache = None
+
+
+def test_live_cache_drops_entries_on_version_bump():
+    vals = np.sort(np.random.default_rng(5).integers(0, 1 << 20, 2 * PAGE))
+    col = delta_encode_column(vals, PAGE)
+    cache = attach_page_cache(col, 8)
+    pdo.decode_row_ranges(col, np.array([0]), np.array([2 * PAGE]),
+                          engine="numpy")
+    assert len(cache) == 2
+    col.bump_version()
+    assert live_cache(col) is cache              # same object, emptied
+    assert len(cache) == 0 and cache.version == col.version
+    col.page_cache = None
+
+
+def test_version_bump_recharges_io():
+    vals = np.sort(np.random.default_rng(6).integers(0, 1 << 20, 2 * PAGE))
+    col = delta_encode_column(vals, PAGE)
+    attach_page_cache(col, 8)
+    pdo.decode_row_ranges(col, np.array([0]), np.array([2 * PAGE]),
+                          engine="numpy")
+    m = IOMeter()
+    pdo.decode_row_ranges(col, np.array([0]), np.array([2 * PAGE]), m,
+                          engine="numpy")
+    assert m.nbytes == 0                         # warm: all hits
+    col.bump_version()
+    m2 = IOMeter()
+    pdo.decode_row_ranges(col, np.array([0]), np.array([2 * PAGE]), m2,
+                          engine="numpy")
+    assert m2.nbytes == col.nbytes()             # stale decodes re-fetched
+    col.page_cache = None
+
+
+# ------------------- resident == per-dispatch == oracle --------------------
+
+@pytest.mark.parametrize("engine", engines(kernel_only=True))
+def test_resident_bit_identical_and_meters_unchanged(adj, batch, engine):
+    want = retrieve_neighbors_batch(adj, batch, TPS)         # numpy oracle
+    m_res, m_leg, m_np = IOMeter(), IOMeter(), IOMeter()
+    res = retrieve_neighbors_batch(adj, batch, TPS, m_res, engine=engine,
+                                   fused=True, resident=True)
+    leg = retrieve_neighbors_batch(adj, batch, TPS, m_leg, engine=engine,
+                                   fused=True, resident=False)
+    retrieve_neighbors_batch(adj, batch, TPS, m_np)
+    assert res == leg == want
+    np.testing.assert_array_equal(res.to_ids(), want.to_ids())
+    assert (m_res.nbytes, m_res.nrequests) \
+        == (m_leg.nbytes, m_leg.nrequests) \
+        == (m_np.nbytes, m_np.nrequests)
+
+
+@pytest.mark.parametrize("engine", engines(kernel_only=True))
+def test_resident_filtered_bit_identical(adj, vt, batch, engine):
+    cond = L("A") | ~L("B")
+    m_res, m_np = IOMeter(), IOMeter()
+    res = retrieve_neighbors_batch(adj, batch, TPS, m_res, engine=engine,
+                                   fused=True, resident=True,
+                                   filter=LabelFilter(vt, cond))
+    want = retrieve_neighbors_batch(adj, batch, TPS, m_np,
+                                    filter=LabelFilter(vt, cond))
+    assert res == want
+    assert (m_res.nbytes, m_res.nrequests) == (m_np.nbytes, m_np.nrequests)
+
+
+@pytest.mark.parametrize("engine", engines(kernel_only=True))
+def test_resident_with_warm_lru_matches_and_charges_nothing(adj, batch,
+                                                            engine):
+    col = adj.table["<dst>"]
+    cache = attach_page_cache(col, 4096)
+    try:
+        cache.clear()
+        want = retrieve_neighbors_batch(adj, batch, TPS)
+        p1 = retrieve_neighbors_batch(adj, batch, TPS, engine=engine,
+                                      fused=True, resident=True)
+        m_warm = IOMeter()
+        p2 = retrieve_neighbors_batch(adj, batch, TPS, m_warm,
+                                      engine=engine, fused=True,
+                                      resident=True)
+        assert p1 == p2 == want
+        m_off = IOMeter()
+        adj.edge_ranges_batch(batch, m_off)
+        assert (m_warm.nbytes, m_warm.nrequests) == (m_off.nbytes,
+                                                     m_off.nrequests)
+        assert cache.hits > 0
+    finally:
+        col.encoded.page_cache = None
+
+
+def test_filter_plan_device_bitmap_cached_once(vt):
+    filt = LabelFilter(vt, L("A") & L("B"))
+    plan = filt.plan()
+    w1 = plan.device_bitmap("jax", plan.n_words)
+    assert plan.device_bitmap("jax", plan.n_words) is w1
+    # matches the host-evaluated bitmap bit for bit
+    np.testing.assert_array_equal(np.asarray(w1), filt.bitmap("numpy"))
+
+
+# --------------------------- dispatch-cost plane ---------------------------
+
+@pytest.mark.parametrize("engine", engines(kernel_only=True))
+def test_steady_state_dispatches_do_not_retrace(adj, engine):
+    rng = np.random.default_rng(23)
+    sizes = rng.integers(40, 64, size=8)         # one pow2 class of ranges
+    batches = [rng.integers(0, N, s) for s in sizes]
+    for vs in batches:                            # warm every size class
+        retrieve_neighbors_batch(adj, vs, TPS, engine=engine, fused=True,
+                                 resident=True)
+    before = _pad.trace_count()
+    for vs in batches:
+        retrieve_neighbors_batch(adj, vs, TPS, engine=engine, fused=True,
+                                 resident=True)
+    assert _pad.trace_count() == before          # jit cache hits only
+
+
+def test_size_class_floors_collapse_small_shapes():
+    assert _pad.size_class(3, 8) == 8
+    assert _pad.size_class(9, 8) == 16
+    assert _pad.size_class(0, 1) == 1
+    assert _pad.next_pow2(0) == 1 and _pad.next_pow2(5) == 8
+    assert _pad.next_multiple(5, 4) == 8
+
+
+def test_empty_batch_and_empty_ranges_resident(adj):
+    pac = retrieve_neighbors_batch(adj, np.zeros(0, np.int64), TPS,
+                                   engine="jax", fused=True, resident=True)
+    assert pac.count() == 0
+    got = pdo.retrieve_pac_batch(
+        adj.table["<dst>"].encoded, np.array([5]), np.array([5]), TPS,
+        engine="jax", num_targets=N, fused=True, resident=True)
+    assert got == PAC(TPS)

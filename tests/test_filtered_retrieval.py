@@ -129,23 +129,31 @@ def test_fused_filter_with_warm_cache(adj, vt, batch, engine):
 
 @pytest.mark.parametrize("engine", engines(kernel_only=True))
 def test_lru_rows_feed_the_kernel_not_redecoded(adj, batch, engine):
-    """Poison one cached page: the fused kernel must consume the host-fed
-    rows (skipping the on-device unpack for hits), so the poisoned ids
-    must show up in the result."""
+    """Poison one cached page: the per-dispatch pack path must consume the
+    host-fed rows (skipping the on-device unpack for hits), so the
+    poisoned ids must show up in the result.  The device-resident path
+    re-decodes hits from the immutable on-device mirror instead of
+    shipping cached rows, so it must be immune to the same poisoning."""
     col = adj.table["<dst>"]
     cache = attach_page_cache(col, 4096)
     try:
         cache.clear()
         clean = retrieve_neighbors_batch(adj, batch, TPS, engine=engine,
-                                         fused=True)
+                                         fused=True, resident=False)
         pages = sorted(p for p in cache._pages)
         victim = pages[0]
         fake = np.full(col.encoded.pages[victim].count, N - 1, np.int64)
         cache.put(victim, fake)
         poisoned = retrieve_neighbors_batch(adj, batch, TPS, engine=engine,
-                                            fused=True)
+                                            fused=True, resident=False)
         assert poisoned != clean
         assert int(N - 1) in poisoned.to_ids().tolist()
+        # resident path: hits decode on device from the packed mirror --
+        # the poisoned host rows never reach the kernel
+        cache.put(victim, fake)
+        immune = retrieve_neighbors_batch(adj, batch, TPS, engine=engine,
+                                          fused=True, resident=True)
+        assert immune == clean
     finally:
         col.encoded.page_cache = None
 

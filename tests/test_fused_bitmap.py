@@ -135,6 +135,36 @@ def test_fused_with_warm_cache_charges_nothing(adj, batch, engine):
         col.encoded.page_cache = None
 
 
+@pytest.mark.parametrize("engine", engines(kernel_only=True))
+def test_fused_resident_toggle_bit_identical(adj, batch, engine):
+    """The device-resident mirror is a transfer optimization only: the
+    fused PAC and IOMeter must be identical with the mirror on and off."""
+    m_on, m_off = IOMeter(), IOMeter()
+    on = retrieve_neighbors_batch(adj, batch, 512, m_on, engine=engine,
+                                  fused=True, resident=True)
+    off = retrieve_neighbors_batch(adj, batch, 512, m_off, engine=engine,
+                                   fused=True, resident=False)
+    assert on == off
+    np.testing.assert_array_equal(on.to_ids(), off.to_ids())
+    assert (m_on.nbytes, m_on.nrequests) == (m_off.nbytes, m_off.nrequests)
+
+
+@pytest.mark.parametrize("engine", engines(kernel_only=True))
+def test_fused_resident_unsorted_duplicated_page_rows(engine):
+    rng = np.random.default_rng(23)
+    vals = rng.integers(0, 1500, size=4096).astype(np.int64)
+    col = delta_encode_column(vals, 512)
+    los = np.array([0, 10, 700, 700, 4000, 9, 0])
+    his = np.array([10, 300, 1400, 1400, 4096, 9, 0])
+    ids = pdo.decode_row_ranges(col, los, his, engine="numpy")
+    want = PAC.from_ids(np.unique(ids), 512)
+    for resident in (True, False):
+        got = pdo.retrieve_pac_batch(col, los, his, 512, engine=engine,
+                                     num_targets=1500, fused=True,
+                                     resident=resident)
+        assert got == want
+
+
 def test_pac_from_bitmap_planes_roundtrip():
     wpp = words_per_page(512)
     planes = np.zeros((4, wpp), np.uint32)

@@ -148,6 +148,37 @@ def test_meter_identical_across_engines_same_cache_state(col, engine):
     col.page_cache = None
 
 
+# --------------------- version keying (staleness fix) ---------------------
+
+def test_packed_cache_stale_on_in_place_page_write(col):
+    """Regression: pack_column was keyed only on len(col.pages), so an
+    in-place rewrite of the last partial page served stale packed data.
+    The version counter keys the cache (and its device mirror) instead."""
+    from repro.core.encoding import delta_encode_page
+    from repro.core import pack_column
+    packed = pack_column(col)
+    last = len(col.pages) - 1
+    tail = np.sort(np.random.default_rng(11).integers(0, 1 << 20, 37))
+    col.set_page(last, delta_encode_page(tail))
+    repacked = pack_column(col)
+    assert repacked is not packed
+    assert repacked.first[last, 0] == tail[0]
+    assert pack_column(col) is repacked          # stable until next write
+
+
+@pytest.mark.parametrize("engine", engines())
+def test_lru_never_serves_stale_after_page_write(col, engine):
+    from repro.core.encoding import delta_encode_page
+    attach_page_cache(col, 64)
+    los, his = np.array([15 * PAGE]), np.array([16 * PAGE])
+    pdo.decode_row_ranges(col, los, his, engine=engine)   # warm page 15
+    tail = np.sort(np.random.default_rng(12).integers(0, 1 << 20, PAGE))
+    col.set_page(15, delta_encode_page(tail))
+    got = pdo.decode_row_ranges(col, los, his, engine=engine)
+    np.testing.assert_array_equal(got, tail)
+    col.page_cache = None
+
+
 # ------------------------ numpy storage-plane path ------------------------
 
 def test_numpy_table_path_consults_cache():
