@@ -1,0 +1,229 @@
+"""Partition plane (PR 5): sharded/partitioned vs single-device resident.
+
+Four sections:
+
+* ``partitioned_fused_*`` -- the partition plane as shipped (adaptive
+  dispatch: single-shard stacked-plan kernels below the SPMD threshold,
+  ``shard_map`` across the device mesh above it) against the monolithic
+  single-device resident path, per engine / batch size / partition count
+  (1, 2, 4, 8 -- 1 is the degenerate case and must be a wash).  The
+  partitioned dispatch additionally caps its page-padding ladder at the
+  stacked plan, which is where it pulls ahead at page-heavy batches.
+
+* ``partitioned_spmd_*`` -- the forced ``shard_map`` tail
+  (``SHARD_MIN_PAGES=0``), the multi-device scaling diagnostic.  On this
+  CI host the "devices" are forced CPU shards of two cores, so these
+  rows measure dispatch overhead, not real scaling; they exist to track
+  the SPMD path's cost over time (re-measure on real accelerators).
+
+* ``partitioned_pruned_*`` -- statistics pushdown: label-filtered
+  retrieval over a community-local graph where partitions' min/max id
+  hulls miss the predicate's qualifying range, so the partition plane
+  skips their decode and I/O wholesale while the monolithic path decodes
+  everything.  Ids are asserted identical; the derived column records
+  the pruned-partition count and the I/O saving.
+
+* interpret-mode rows (``REPRO_INTERPRET=1``): the pallas rows rerun
+  with the suffix ``_interp`` -- on CPU the pallas engine always runs
+  the kernels in interpret mode, and these rows pin that cost explicitly
+  in the tracked trajectory (ROADMAP interpret-mode follow-up).
+
+Every timed comparison is preceded by a bit-identity + IOMeter assertion
+against the single-device path (and for pruned rows, an ids-only
+assertion plus a bytes-strictly-less check).  ``REPRO_BENCH_SMOKE=1``
+shrinks the graph so CI runs the suite in seconds.  Run with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to put the SPMD
+rows on an 8-shard mesh (without it they degenerate to one device).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import (BY_SRC, ENC_GRAPHAR, IOMeter, L, LabelFilter,
+                        build_adjacency, live_partitions, partition_column,
+                        retrieve_neighbors_batch)
+from repro.core.schema import VertexTypeSchema
+from repro.core.vertex import VertexTable
+from repro.kernels.pac_decode import ops as pdo
+
+from .util import emit
+
+SMOKE = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+INTERP = bool(os.environ.get("REPRO_INTERPRET"))
+N = 2_000 if SMOKE else 20_000
+DEG = 8 if SMOKE else 16
+PAGE = 512 if SMOKE else 2048
+BATCH_SIZES = (64,) if SMOKE else (64, 512)
+PART_COUNTS = (2,) if SMOKE else (1, 2, 4, 8)
+REPS = 8 if SMOKE else 120
+
+
+def _paired(fa, fb, reps=REPS):
+    """Interleaved A/B timing (see bench_resident): min us/call for each
+    plus the median of per-pair ratios (drift-robust on a shared box)."""
+    fa(), fb(), fa(), fb()
+    ta, tb = [], []
+    for i in range(reps):
+        pair = (fa, ta), (fb, tb)
+        for fn, acc in (pair if i % 2 == 0 else pair[::-1]):
+            t0 = time.perf_counter()
+            fn()
+            acc.append(time.perf_counter() - t0)
+    ratios = sorted(b / a for a, b in zip(ta, tb))
+    return (min(ta) * 1e6, min(tb) * 1e6, ratios[len(ratios) // 2])
+
+
+def _fixture(local=False):
+    if local:
+        # perfectly community-local graph: each partition's value hull
+        # tracks its source range, the regime GraphAr's chunked layouts
+        # (and LDBC-style community graphs) put you in -- statistics
+        # pruning has teeth here.  Clipped (not wrapped) neighbors: a
+        # single wrap-around edge would stretch a boundary partition's
+        # min/max hull across the whole id space.
+        off = np.concatenate([np.arange(-(DEG // 2), 0),
+                              np.arange(1, DEG - DEG // 2 + 1)])
+        src = np.repeat(np.arange(N), len(off))
+        dst = np.clip(np.arange(N)[:, None] + off[None, :], 0, N - 1).ravel()
+    else:
+        from repro.data.synthetic import powerlaw_graph
+        src, dst = powerlaw_graph(N, DEG, locality=0.85, seed=11)
+    return src, dst
+
+
+def _adj(src, dst):
+    return build_adjacency(src, dst, N, N, BY_SRC, ENC_GRAPHAR,
+                           page_size=PAGE)
+
+
+def _check_identity(mono, part, vs, engine, filt=None, exact_meter=True):
+    m_a, m_b = IOMeter(), IOMeter()
+    f = (lambda: LabelFilter(filt.vt, filt.cond)) if filt else lambda: None
+    want = retrieve_neighbors_batch(mono, vs, PAGE, m_a, engine=engine,
+                                    fused=True, resident=True, filter=f())
+    got = retrieve_neighbors_batch(part, vs, PAGE, m_b, engine=engine,
+                                   fused=True, resident=True, filter=f())
+    assert got == want, "partitioned ids must match single-device"
+    if exact_meter:
+        assert (m_a.nbytes, m_a.nrequests) == (m_b.nbytes, m_b.nrequests), \
+            "partitioned IOMeter must match single-device"
+    else:
+        assert m_b.nbytes <= m_a.nbytes, "pruning may only remove I/O"
+    return m_a.nbytes, m_b.nbytes
+
+
+def _engines():
+    eng = ["jax", "pallas"]
+    if INTERP:
+        eng.append("pallas_interp")  # same engine, explicit interp row tag
+    return eng
+
+
+def _resolve(engine):
+    return ("pallas", "_interp") if engine == "pallas_interp" \
+        else (engine, "")
+
+
+def run() -> None:
+    src, dst = _fixture()
+    mono = _adj(src, dst)
+
+    # ---- adaptive partitioned vs single-device resident -------------------
+    for engine in _engines():
+        eng, tag = _resolve(engine)
+        for bs in BATCH_SIZES:
+            vs = np.random.default_rng(bs).integers(0, N, bs)
+            fm = lambda: retrieve_neighbors_batch(
+                mono, vs, PAGE, engine=eng, fused=True, resident=True)
+            for n_parts in PART_COUNTS:
+                part = _adj(src, dst)
+                partition_column(part.table["<dst>"].encoded, n_parts)
+                _check_identity(mono, part, vs, eng)
+                fp = lambda: retrieve_neighbors_batch(
+                    part, vs, PAGE, engine=eng, fused=True, resident=True)
+                t_mono, t_part, ratio = _paired(fm, fp)
+                emit(f"partitioned_fused_{eng}{tag}_p{n_parts}_bs{bs}",
+                     t_part,
+                     f"mono_us={t_mono:.2f};"
+                     f"partitioned_over_mono={1 / ratio:.2f};"
+                     f"io_identical=1")
+                # drift-robust speedup as its own JSON row (x100):
+                # the median of per-pair ratios from the interleaved run
+                emit(f"partitioned_fused_{eng}{tag}_p{n_parts}_bs{bs}"
+                     ":speedup_pct", 100 / ratio, "")
+            emit(f"mono_fused_{eng}{tag}_bs{bs}", t_mono, "")
+
+    # ---- forced-SPMD diagnostic rows --------------------------------------
+    import jax
+    n_dev = len(jax.devices())
+    saved = pdo.SHARD_MIN_PAGES
+    pdo.SHARD_MIN_PAGES = 0
+    try:
+        for engine in _engines():
+            eng, tag = _resolve(engine)
+            for bs in BATCH_SIZES[-1:]:
+                vs = np.random.default_rng(bs).integers(0, N, bs)
+                fm = lambda: retrieve_neighbors_batch(
+                    mono, vs, PAGE, engine=eng, fused=True, resident=True)
+                for n_parts in PART_COUNTS:
+                    if n_parts == 1:
+                        continue
+                    part = _adj(src, dst)
+                    partition_column(part.table["<dst>"].encoded, n_parts)
+                    _check_identity(mono, part, vs, eng)
+                    parts = live_partitions(part.table["<dst>"].encoded)
+                    g = parts.mesh_size(n_dev)
+                    fp = lambda: retrieve_neighbors_batch(
+                        part, vs, PAGE, engine=eng, fused=True,
+                        resident=True)
+                    t_mono, t_part, ratio = _paired(fm, fp)
+                    emit(f"partitioned_spmd_{eng}{tag}_p{n_parts}_bs{bs}",
+                         t_part,
+                         f"mono_us={t_mono:.2f};"
+                         f"spmd_over_mono={1 / ratio:.2f};"
+                         f"mesh_devices={g};io_identical=1")
+                    emit(f"partitioned_spmd_{eng}{tag}_p{n_parts}_bs{bs}"
+                         ":speedup_pct", 100 / ratio, "")
+    finally:
+        pdo.SHARD_MIN_PAGES = saved
+
+    # ---- statistics pushdown (label filter x partition hulls) -------------
+    src, dst = _fixture(local=True)
+    mono = _adj(src, dst)
+    labels = {"HOT": np.arange(N) < N // 4}
+    lvt = VertexTable.build(
+        VertexTypeSchema("v", [], labels=["HOT"], page_size=PAGE),
+        {}, labels, num_vertices=N)
+    for engine in _engines():
+        eng, tag = _resolve(engine)
+        for bs in BATCH_SIZES:
+            vs = np.random.default_rng(bs).integers(0, N, bs)
+            filt_m = LabelFilter(lvt, L("HOT"))
+            fm = lambda: retrieve_neighbors_batch(
+                mono, vs, PAGE, engine=eng, fused=True, resident=True,
+                filter=filt_m)
+            for n_parts in PART_COUNTS:
+                if n_parts == 1:
+                    continue
+                part = _adj(src, dst)
+                partition_column(part.table["<dst>"].encoded, n_parts)
+                nb_mono, nb_part = _check_identity(
+                    mono, part, vs, eng, filt=filt_m, exact_meter=False)
+                filt_p = LabelFilter(lvt, L("HOT"))
+                fp = lambda: retrieve_neighbors_batch(
+                    part, vs, PAGE, engine=eng, fused=True, resident=True,
+                    filter=filt_p)
+                t_mono, t_part, ratio = _paired(fm, fp)
+                parts = live_partitions(part.table["<dst>"].encoded)
+                emit(f"partitioned_pruned_{eng}{tag}_p{n_parts}_bs{bs}",
+                     t_part,
+                     f"mono_us={t_mono:.2f};"
+                     f"pruned_over_mono={1 / ratio:.2f};"
+                     f"stats_pruned={parts.stats_pruned};"
+                     f"io_saved_pct={100 * (1 - nb_part / max(nb_mono, 1)):.0f};"
+                     f"ids_identical=1")
+                emit(f"partitioned_pruned_{eng}{tag}_p{n_parts}_bs{bs}"
+                     ":speedup_pct", 100 / ratio, "")

@@ -3,9 +3,10 @@ from .builder import Graph, GraphArBuilder, TransformTiming
 from .edge import (BY_DST, BY_SRC, ENC_GRAPHAR, ENC_OFFSET, ENC_PLAIN,
                    AdjacencyTable, EdgeTable, build_adjacency)
 from .encoding import (DEFAULT_PAGE_SIZE, DeltaColumn, DeltaPage, PackedPages,
-                       RleColumn, delta_decode_column, delta_decode_page,
-                       delta_encode_column, delta_encode_page, pack_column,
-                       rle_decode_bool, rle_encode_bool)
+                       RleColumn, build_packed, delta_decode_column,
+                       delta_decode_page, delta_encode_column,
+                       delta_encode_page, pack_column, rle_decode_bool,
+                       rle_encode_bool)
 from .labels import (And, Cond, CondProgram, L, LabelFilter, Not, Or,
                      bitmap_to_intervals, charge_label_metadata,
                      compile_cond, complex_filter_intervals, eval_program,
@@ -22,6 +23,8 @@ from .neighbor import (decode_edge_ranges, degrees_topk, fetch_properties,
 from .pac import (PAC, bitmap_to_ids, ids_to_bitmap, pages_union,
                   words_per_page)
 from .page_cache import DecodedPageCache, attach_page_cache, live_cache
+from .partition import (Partition, PartitionedColumn, ensure_default_partitions,
+                        live_partitions, partition_bounds, partition_column)
 from .schema import EdgeTypeSchema, GraphSchema, PropertySchema, VertexTypeSchema
 from .storage import ESSD, MEDIA, OSS, TMPFS, GraphStore, IOMeter, MediaModel
 from .table import (BoolPlainColumn, BoolRleColumn, DeltaIntColumn,

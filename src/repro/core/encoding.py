@@ -106,6 +106,13 @@ class DeltaPage:
 
     ``packed`` concatenates the miniblocks' word arrays;
     ``word_offsets[i]`` is the starting word of miniblock ``i``.
+
+    ``vmin``/``vmax`` are the page's value statistics, recorded at encode
+    time (the values are in hand then; recovering them later would cost a
+    decode).  They feed the partition plane's statistics pushdown: a page
+    (or partition) whose ``[vmin, vmax]`` hull cannot intersect a
+    predicate's qualifying id range contributes nothing and can be
+    skipped.  An empty page records the empty hull ``(0, -1)``.
     """
 
     count: int
@@ -114,6 +121,8 @@ class DeltaPage:
     bit_widths: np.ndarray     # uint8 [n_mini]
     word_offsets: np.ndarray   # int32 [n_mini]
     packed: np.ndarray         # uint32 [n_words]
+    vmin: int = 0              # min value in the page (0 if empty)
+    vmax: int = -1             # max value in the page (-1 if empty)
 
     def nbytes(self) -> int:
         # Physical layout cost: header (count, first) + per-miniblock
@@ -152,7 +161,8 @@ def delta_encode_page(values: np.ndarray) -> DeltaPage:
         chunks.append(words)
         woff += len(words)
     packed = (np.concatenate(chunks) if chunks else np.zeros(0, np.uint32))
-    return DeltaPage(n, int(v[0]), min_deltas, widths, offsets, packed)
+    return DeltaPage(n, int(v[0]), min_deltas, widths, offsets, packed,
+                     vmin=int(v.min()), vmax=int(v.max()))
 
 
 def delta_decode_page(page: DeltaPage) -> np.ndarray:
@@ -291,6 +301,15 @@ class PackedPages:
     page_size: int = 0
     #: :attr:`DeltaColumn.version` this build corresponds to.
     version: int = 0
+    #: per-page value statistics (min/max id per page, int64[n_pages];
+    #: empty pages record the empty hull (0, -1)).  Recorded at pack time
+    #: from the pages' encode-time stats -- the first step of the
+    #: statistics-pushdown plane (partition/page pruning against a
+    #: predicate's qualifying id range).
+    page_min: "np.ndarray | None" = dataclasses.field(
+        default=None, repr=False, compare=False)
+    page_max: "np.ndarray | None" = dataclasses.field(
+        default=None, repr=False, compare=False)
     #: engine -> tuple of device arrays; populated lazily, once per engine.
     _device: Dict[str, Tuple] = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
@@ -418,9 +437,19 @@ class DeltaColumn:
     page_cache: "object | None" = dataclasses.field(
         default=None, repr=False, compare=False)
     #: monotonically increasing write counter; every derived cache
-    #: (``packed_cache``, its device mirror, the decoded-page LRU) is
-    #: keyed on it, so in-place page writes can never serve stale data.
+    #: (``packed_cache``, its device mirror, the decoded-page LRU, the
+    #: partition plane) is keyed on it, so in-place page writes can never
+    #: serve stale data.
     version: int = dataclasses.field(default=0, compare=False)
+    #: requested partition count (0 = monolithic).  Set by
+    #: :func:`repro.core.partition.partition_column`; the partition plane
+    #: rebuilds :attr:`partition_cache` lazily after a version bump.
+    partitions: int = dataclasses.field(default=0, compare=False)
+    #: lazily built :class:`repro.core.partition.PartitionedColumn`
+    #: (keyed on ``(version, partitions)``); not part of the storage
+    #: format.
+    partition_cache: "object | None" = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def nbytes(self) -> int:
         return sum(p.nbytes() for p in self.pages)
@@ -448,30 +477,31 @@ class DeltaColumn:
         self.bump_version()
 
 
-def pack_column(col: DeltaColumn) -> PackedPages:
-    """Build (or return the cached) column-wide packed-page arrays.
+def build_packed(pages: "List[DeltaPage]", page_size: int,
+                 version: int = 0) -> PackedPages:
+    """Pack an arbitrary page list into the kernels' batch-array layout.
 
     Pads miniblock metadata to ``page_size // MINIBLOCK`` and packed words
     to the worst case (bw=32) -- exactly the layout the pac_decode kernels
-    tile over.  The cache is keyed on ``(n_pages, version)`` so both
-    appended and in-place-rewritten pages rebuild it (and, transitively,
-    the device mirror that lives on it).
+    tile over.  Shared by the whole-column :func:`pack_column` and the
+    partition plane's per-partition packs
+    (:func:`repro.core.partition.partition_column`), which call it over
+    contiguous page slices.  Per-page min/max id statistics ride along
+    from the pages' encode-time stats.
     """
-    if col.packed_cache is not None \
-            and col.packed_cache.n_pages == len(col.pages) \
-            and col.packed_cache.version == col.version:
-        return col.packed_cache
-    ps = col.page_size
+    ps = page_size
     n_mini = max(1, ps // MINIBLOCK)
     max_words = ps  # worst case: 32-bit deltas -> one word per delta
-    n = len(col.pages)
+    n = len(pages)
     first = np.zeros((n, 1), np.int32)
     counts = np.zeros((n, 1), np.int32)
     mind = np.zeros((n, n_mini), np.int32)
     bw = np.zeros((n, n_mini), np.int32)
     woff = np.zeros((n, n_mini), np.int32)
     packed = np.zeros((n, max_words), np.uint32)
-    for i, pg in enumerate(col.pages):
+    pmin = np.zeros(n, np.int64)
+    pmax = np.full(n, -1, np.int64)
+    for i, pg in enumerate(pages):
         first[i, 0] = pg.first_value
         counts[i, 0] = pg.count
         k = len(pg.min_deltas)
@@ -479,8 +509,25 @@ def pack_column(col: DeltaColumn) -> PackedPages:
         bw[i, :k] = pg.bit_widths
         woff[i, :k] = pg.word_offsets
         packed[i, :len(pg.packed)] = pg.packed
-    col.packed_cache = PackedPages(first, mind, bw, woff, packed, counts,
-                                   page_size=ps, version=col.version)
+        pmin[i], pmax[i] = pg.vmin, pg.vmax
+    return PackedPages(first, mind, bw, woff, packed, counts,
+                       page_size=ps, version=version,
+                       page_min=pmin, page_max=pmax)
+
+
+def pack_column(col: DeltaColumn) -> PackedPages:
+    """Build (or return the cached) column-wide packed-page arrays.
+
+    The cache is keyed on ``(n_pages, version)`` so both appended and
+    in-place-rewritten pages rebuild it (and, transitively, the device
+    mirror that lives on it).
+    """
+    if col.packed_cache is not None \
+            and col.packed_cache.n_pages == len(col.pages) \
+            and col.packed_cache.version == col.version:
+        return col.packed_cache
+    col.packed_cache = build_packed(col.pages, col.page_size,
+                                    version=col.version)
     return col.packed_cache
 
 

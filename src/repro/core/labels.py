@@ -259,6 +259,12 @@ class LabelFilter:
     def charge(self, meter) -> None:
         charge_label_metadata(self.vt, self.program.labels, meter)
 
+    def qual_range(self) -> Tuple[int, int]:
+        """Half-open hull ``[lo, hi)`` of the qualifying ids (evaluated
+        lazily, once, on the plan).  The partition plane's statistics
+        pushdown skips partitions whose value hull cannot intersect it."""
+        return self.plan().qual_range()
+
     def plan(self):
         """Padded kernel inputs (positions/meta) + program, built once.
 

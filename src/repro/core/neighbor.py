@@ -27,6 +27,7 @@ import numpy as np
 
 from .edge import AdjacencyTable
 from .pac import PAC
+from .partition import ensure_default_partitions
 from .table import DeltaIntColumn
 from .vertex import VertexTable
 
@@ -35,6 +36,11 @@ def _kernel_column(adj: AdjacencyTable):
     col = adj.table[adj.value_col]
     if not isinstance(col, DeltaIntColumn):
         raise TypeError("kernel engines require a delta-encoded column")
+    # REPRO_PARTITIONS default: columns without explicit partitioning
+    # pick up the environment's partition count here, so every batched
+    # consumer (k_hop, IC-8/BI-2, serving) routes through the partition
+    # plane transparently
+    ensure_default_partitions(col.encoded)
     return col.encoded
 
 

@@ -105,6 +105,10 @@ def _col_meta_and_bufs(col: Column, w: _Writer) -> dict:
         for p in enc.pages:
             pages_meta.append({
                 "count": p.count, "first": p.first_value,
+                # per-page value statistics (partition plane pruning);
+                # readers of files without them fall back to the
+                # unknown-hull sentinel, which disables pruning only
+                "vmin": p.vmin, "vmax": p.vmax,
                 "min_deltas": w.put(_np_buf(p.min_deltas)),
                 "bit_widths": w.put(_np_buf(p.bit_widths)),
                 "word_offsets": w.put(_np_buf(p.word_offsets)),
@@ -185,7 +189,8 @@ def read_table(path: str) -> Table:
                     min_deltas=_read_ref(body, pm["min_deltas"], np.int64),
                     bit_widths=_read_ref(body, pm["bit_widths"], np.uint8),
                     word_offsets=_read_ref(body, pm["word_offsets"], np.int32),
-                    packed=_read_ref(body, pm["packed"], np.uint32)))
+                    packed=_read_ref(body, pm["packed"], np.uint32),
+                    vmin=pm.get("vmin", 0), vmax=pm.get("vmax", -1)))
             col = DeltaIntColumn.__new__(DeltaIntColumn)
             col.name, col.count, col.page_size = name, m["count"], ps
             col.encoded = DeltaColumn(m["count"], m["page_size"], pages)

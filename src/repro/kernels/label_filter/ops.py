@@ -34,8 +34,6 @@ from . import ref as R
 
 ENGINES = ("numpy", "jax", "pallas")
 
-# back-compat alias; the canonical helper moved to repro.kernels._pad
-_next_multiple = next_multiple
 
 
 @dataclasses.dataclass
@@ -60,16 +58,44 @@ class FilterPlan:
     pos: np.ndarray    # int32 [k, n_pos]
     meta: np.ndarray   # int32 [k, 2]
     count: int         # number of rows (vertices)
+    #: vertex table the plan was built over (for the lazy qualifying-hull
+    #: evaluation; label columns are immutable).
+    vt: "VertexTable | None" = dataclasses.field(
+        default=None, repr=False, compare=False)
+    #: lazily evaluated qualifying hull (see :meth:`qual_range`).
+    _qual: "Tuple[int, int] | None" = dataclasses.field(
+        default=None, repr=False, compare=False)
     #: engine -> (device pos, device meta); populated lazily, once each.
     _device: Dict[str, Tuple] = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
-    #: (engine, n_words) -> device uint32[n_words] predicate plane.
-    _device_bitmaps: Dict[Tuple[str, int], object] = dataclasses.field(
+    #: (engine, n_words[, mesh]) -> device uint32[n_words] predicate
+    #: plane (the 3-tuple keys are the mesh-replicated copies consumed by
+    #: the sharded dispatches).
+    _device_bitmaps: Dict[Tuple, object] = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
 
     @property
     def n_words(self) -> int:
         return -(-self.count // 32)
+
+    def qual_range(self) -> Tuple[int, int]:
+        """Half-open hull ``[lo, hi)`` of the qualifying ids.
+
+        The partition plane's statistics pushdown compares partitions'
+        min/max id hulls against it: a partition whose values cannot
+        land inside the hull contributes nothing after the AND and is
+        skipped.  Evaluated on the host (``program_filter_intervals``)
+        **lazily, on first use**, and cached for the plan's lifetime --
+        only the partition plane consumes it, so the one-shot kernel
+        entries (``label_filter_bitmap`` et al.) never pay the host
+        merge evaluation.  ``(0, 0)`` when nothing qualifies (every
+        partition prunes -- correct: no id can pass the predicate).
+        """
+        if self._qual is None:
+            starts, ends = program_filter_intervals(self.vt, self.program)
+            self._qual = ((int(starts[0]), int(ends[-1]))
+                          if starts.size else (0, 0))
+        return self._qual
 
     def device(self, engine: str) -> Tuple:
         """Device mirror of the RLE run arrays (once per engine)."""
@@ -99,6 +125,26 @@ class FilterPlan:
             self._device_bitmaps[key] = words
         return words
 
+    def device_bitmap_sharded(self, engine: str, n_words: int, mesh):
+        """The predicate plane replicated across a partition mesh.
+
+        Keyed per (engine, n_words, mesh) so the replication crosses the
+        host->device boundary once: every shard of the sharded fused
+        dispatch ANDs its local copy, and filtered sharded dispatches
+        ship no label bytes -- the multi-device analogue of
+        :meth:`device_bitmap`'s single-device residency.
+        """
+        key = (engine, n_words, mesh)
+        words = self._device_bitmaps.get(key)
+        if words is None:
+            import jax
+            from jax.sharding import NamedSharding, PartitionSpec
+            words = jax.device_put(
+                self.device_bitmap(engine, n_words),
+                NamedSharding(mesh, PartitionSpec()))
+            self._device_bitmaps[key] = words
+        return words
+
 
 def make_plan(vt: VertexTable, cond: Union[Cond, CondProgram]) -> FilterPlan:
     program = compile_cond(cond)
@@ -106,13 +152,13 @@ def make_plan(vt: VertexTable, cond: Union[Cond, CondProgram]) -> FilterPlan:
         raise ValueError("condition references no labels")
     rles = [vt.label_rle(n) for n in program.labels]
     n = vt.num_vertices
-    n_pos = _next_multiple(max(r.positions.size for r in rles), 128)
+    n_pos = next_multiple(max(r.positions.size for r in rles), 128)
     pos = np.full((len(rles), n_pos), n, np.int32)
     meta = np.zeros((len(rles), 2), np.int32)
     for i, r in enumerate(rles):
         pos[i, :r.positions.size] = r.positions
         meta[i] = (int(r.first_value), n)
-    return FilterPlan(program, pos, meta, n)
+    return FilterPlan(program, pos, meta, n, vt=vt)
 
 
 def label_filter_bitmap(vt: VertexTable, cond: Union[Cond, CondProgram],
@@ -126,7 +172,7 @@ def label_filter_bitmap(vt: VertexTable, cond: Union[Cond, CondProgram],
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; want one of {ENGINES}")
     plan = make_plan(vt, program)
-    n_words = _next_multiple(plan.n_words or 1, K.WORD_TILE)
+    n_words = next_multiple(plan.n_words or 1, K.WORD_TILE)
     if engine == "pallas":
         words = K.cond_bitmap_pallas(jnp.asarray(plan.pos),
                                      jnp.asarray(plan.meta),

@@ -38,6 +38,7 @@ from repro.core.encoding import DeltaColumn, delta_decode_page, pack_column
 from repro.core.labels import intervals_to_ids
 from repro.core.pac import PAC
 from repro.core.page_cache import live_cache, miss_runs
+from repro.core.partition import live_partitions
 from repro.kernels._pad import next_multiple, next_pow2, size_class
 
 from . import kernel as K
@@ -66,9 +67,17 @@ DEVICE_RESIDENT = os.environ.get("REPRO_DEVICE_RESIDENT", "1") \
 PAGE_CLASS_MIN = 8
 RANGE_CLASS_MIN = 64
 
-# kept as aliases: the canonical helpers live in repro.kernels._pad now
-_next_multiple = next_multiple
-_next_pow2 = next_pow2
+#: adaptive sharding threshold for the partition plane: the SPMD
+#: (``shard_map``) dispatch pays a fixed multi-executable launch cost per
+#: call, so partitioned columns shard across the device mesh only when
+#: the busiest device gets at least this many pages to decode; below it
+#: the plane takes its **degenerate single-shard dispatch** -- the
+#: monolithic resident kernels over the stacked partition plan on one
+#: device -- which costs what the unpartitioned path costs.  Results,
+#: meters, and pruning are identical either way.  ``REPRO_SHARD_MIN_PAGES=0``
+#: forces SPMD everywhere (the multi-device CI job does, so the sharded
+#: path is validated without real accelerators).
+SHARD_MIN_PAGES = int(os.environ.get("REPRO_SHARD_MIN_PAGES", "48"))
 
 #: (engine, n_words) -> previous dispatch's bitmap plane; handed back to
 #: the resident kernel as its aliased output buffer so steady-state
@@ -138,16 +147,130 @@ def _page_index_vector(pages: Sequence[int]) -> np.ndarray:
     return idx
 
 
+def _stack_index(parts, pages: np.ndarray,
+                 owner: np.ndarray) -> np.ndarray:
+    """Flat row of each global page in the partition-major stacked plan
+    (``owner * pmax + offset within partition``) -- the index space every
+    partitioned gather consumes.  A device shard's block-local index is
+    this minus the block's first row."""
+    return (owner * parts.pmax
+            + (pages - parts.bounds[owner])).astype(np.int32)
+
+
+def _page_class(n: int, stack_rows: int) -> int:
+    """Page-padding class for a partitioned dispatch: the shared pow2
+    ladder, capped at the (PAGE_CLASS_MIN-rounded) whole stack.  The
+    stacked plan bounds how many distinct rows a gather can name, so
+    padding past it is pure wasted decode -- at large page counts the
+    uncapped pow2 ladder of the monolithic path over-decodes by up to
+    ~2x (e.g. 157 touched pages pad to 256 there, 160 here).  The cap
+    adds at most one extra jit size class per column."""
+    return min(size_class(n, PAGE_CLASS_MIN),
+               next_multiple(stack_rows, PAGE_CLASS_MIN))
+
+
+_N_DEVICES: "int | None" = None
+
+
+def _n_devices() -> int:
+    """Device count, resolved once (the PjRt device list is fixed for
+    the process lifetime; ``jax.devices()`` is not free on the dispatch
+    hot path)."""
+    global _N_DEVICES
+    if _N_DEVICES is None:
+        import jax
+        _N_DEVICES = len(jax.devices())
+    return _N_DEVICES
+
+
+def _shard_width(parts, owner: np.ndarray
+                 ) -> Tuple[int, int, "np.ndarray | None",
+                            "np.ndarray | None"]:
+    """Adaptive mesh width for one dispatch.
+
+    Returns ``(g, ppd, dev_of_page, per_dev)``; ``g == 1`` selects the
+    degenerate single-shard dispatch (one-device host, or no device's
+    page bucket reaches ``SHARD_MIN_PAGES`` -- the SPMD launch cost
+    would not amortize), in which case the bucketing outputs are None.
+    The one home for the policy: the fused and non-fused paths must
+    shard under identical conditions.
+    """
+    g = parts.mesh_size(_n_devices())
+    if g <= 1:
+        return 1, 1, None, None
+    ppd = parts.n_parts // g
+    dev_of_page = owner // ppd
+    per_dev = np.bincount(dev_of_page, minlength=g)
+    if per_dev.max() < SHARD_MIN_PAGES:
+        return 1, 1, None, None
+    return g, ppd, dev_of_page, per_dev
+
+
+def _sharded_decode_matrix(col: DeltaColumn, parts, pages: Sequence[int],
+                           engine: str) -> np.ndarray:
+    """Partitioned page-matrix decode (the non-fused batched path).
+
+    Pages are re-addressed into the stacked partition plan; above the
+    sharding threshold they are bucketed per device and decoded through
+    one ``shard_map`` dispatch over the partition mesh, below it through
+    the monolithic resident gather over the single-device stacked plan.
+    Same contract as the monolithic resident decode --
+    int64[len(pages), page_size], tails zeroed by the caller."""
+    ps = col.page_size
+    pages_arr = np.asarray(pages, np.int64)
+    owner, _ = parts.prune(pages_arr)  # dispatch/pruning counters only
+    stack_idx = _stack_index(parts, pages_arr, owner)
+    g, ppd, dev_of_page, per_dev = _shard_width(parts, owner)
+    if g == 1:
+        arrays, _ = parts.device_plan_single(engine)
+        idx = np.zeros(_page_class(len(pages_arr), parts.stack_rows),
+                       np.int32)
+        idx[:len(pages_arr)] = stack_idx
+        fn = K.gather_decode_pallas if engine == "pallas" \
+            else R.gather_decode_ref
+        ids = fn(*arrays, jnp.asarray(idx), page_size=ps)
+        return np.asarray(ids[:len(pages_arr)], np.int64)
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec
+    from repro.kernels.shard import sharded_decode_entry
+    mesh, plan, pmax = parts.device_plan(engine)
+    block0 = dev_of_page * (ppd * pmax)      # first stacked row per block
+    local_idx = (stack_idx - block0).astype(np.int32)
+    p_pad = _page_class(int(per_dev.max()), ppd * pmax)
+    idxmat = np.zeros((g, p_pad), np.int32)
+    for i in range(g):
+        sel = local_idx[dev_of_page == i]
+        idxmat[i, :len(sel)] = sel
+    jidx = jax.device_put(idxmat,
+                          NamedSharding(mesh, PartitionSpec("part", None)))
+    fn = sharded_decode_entry(mesh, engine, ps, p_pad)
+    mat = np.asarray(fn(*plan, jidx), np.int64)  # [g, p_pad, ps]
+    # row of page i = its appearance order within its device's bucket --
+    # the same masks that filled idxmat, so correct for any page order
+    within = np.empty(len(pages_arr), np.int64)
+    for i in range(g):
+        m = dev_of_page == i
+        within[m] = np.arange(int(m.sum()))
+    return mat[dev_of_page, within]
+
+
 def _decode_page_matrix(col: DeltaColumn, pages: Sequence[int],
                         engine: str) -> np.ndarray:
     """Engine dispatch only -- no cache, no metering (see decode_page_list).
 
     Kernel engines follow the ``REPRO_DEVICE_RESIDENT`` default (the
     per-call ``resident=`` override exists on the fused entry points
-    only)."""
+    only).  Columns with a partition plane attached
+    (:func:`repro.core.partition.partition_column`) decode through the
+    sharded entry -- pages bucketed per partition, one dispatch across
+    the device mesh -- with bit-identical output.
+    """
     ps = col.page_size
     n = len(pages)
+    parts = live_partitions(col)
     if engine == "numpy":
+        if parts is not None:
+            parts.prune(np.asarray(pages, np.int64))  # accounting only
         out = np.zeros((n, ps), np.int64)
         for i, p in enumerate(pages):
             d = delta_decode_page(col.pages[p])
@@ -155,6 +278,12 @@ def _decode_page_matrix(col: DeltaColumn, pages: Sequence[int],
         return out
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; want one of {ENGINES}")
+    if parts is not None and DEVICE_RESIDENT:
+        ids = _sharded_decode_matrix(col, parts, pages, engine)
+        counts = np.asarray([col.pages[int(p)].count for p in pages],
+                            np.int64)
+        cols = np.arange(ps)[None, :]
+        return np.where(cols < counts[:, None], ids, 0)
     if DEVICE_RESIDENT:
         # device-resident path: the unpack plan crossed the PCIe once;
         # the dispatch ships the int32 page-index vector and gathers +
@@ -171,7 +300,7 @@ def _decode_page_matrix(col: DeltaColumn, pages: Sequence[int],
         counts = packed.counts[np.asarray(pages, np.int64), 0]
     else:
         args = pack_page_list(col, pages)
-        pad = _next_pow2(n) - n
+        pad = next_pow2(n) - n
         if pad:
             args = tuple(np.concatenate(
                 [a, np.zeros((pad,) + a.shape[1:], a.dtype)]) for a in args)
@@ -203,27 +332,36 @@ def decode_page_list(col: DeltaColumn, pages: Sequence[int],
     pages are decoded and IOMeter-charged; hit rows are assembled from
     the cache and cost no lake I/O.  Without a cache every page is a miss
     (the pre-LRU accounting, unchanged).
+
+    On a partitioned column, cache entries live in the ``(partition,
+    page)`` namespace (the same keying the sharded fused path uses), so
+    fused and non-fused dispatches against one column share warm pages.
     """
     ps = col.page_size
     n = len(pages)
     if n == 0:
         return np.zeros((0, ps), np.int64)
     cache = live_cache(col)
+    parts = live_partitions(col)
+    pages_arr = np.asarray(pages, np.int64)
+    owner = parts.part_of_pages(pages_arr) if parts is not None else None
     if cache is None:
         _charge_pages(col, pages, meter)
         return _decode_page_matrix(col, pages, engine)
-    hits, miss = cache.split(pages)
+    hits, miss = cache.split(pages, owner=owner)
     _charge_pages(col, miss, meter)
     out = np.zeros((n, ps), np.int64)
-    pages_arr = np.asarray(pages, np.int64)
     if miss:
         mat = _decode_page_matrix(col, miss, engine)
         # miss preserves the sorted page order, so one fancy-index scatter
         # places every miss row (no per-row dict lookups)
         is_miss = np.isin(pages_arr, np.asarray(miss, np.int64))
-        out[np.flatnonzero(is_miss)] = mat
+        miss_idx = np.flatnonzero(is_miss)
+        out[miss_idx] = mat
         for i, p in enumerate(miss):
-            cache.put(p, mat[i, :col.pages[p].count].copy())
+            cache.put(p, mat[i, :col.pages[p].count].copy(),
+                      part=None if owner is None
+                      else int(owner[miss_idx[i]]))
         hit_idx = np.flatnonzero(~is_miss)
     else:
         hit_idx = np.arange(n)
@@ -310,6 +448,164 @@ def _gather_positions(pages: np.ndarray, base_of_page: np.ndarray,
     return gidx, total
 
 
+def _retrieve_pac_batch_sharded(col: DeltaColumn, parts, los, his, pages,
+                                target_page_size: int, num_targets: int,
+                                meter, engine: str, filter_plan=None) -> PAC:
+    """Partition-sharded fused path: one ``shard_map`` dispatch across the
+    partition mesh, per-partition bitmap planes OR-merged into one PAC.
+
+    The host buckets the batch per partition: the deduplicated page set
+    and the requested-row positions are split at partition boundaries
+    (partitions are page-aligned, so a range spanning a boundary simply
+    contributes rows to both sides), re-addressed into each device's
+    block-local index space, and shipped as one ``staged`` matrix (row
+    ``i`` = device ``i``'s ``[idx | gidx | total]`` vector).  Each shard
+    gathers and decodes its partitions' pages from the sharded stacked
+    plan and scatters its rows into a full target bitmap plane; the ``g``
+    planes OR together on the host (a target id may be a neighbor via
+    several partitions).
+
+    Pruning happens before anything is charged or shipped: partitions
+    holding none of the batch's pages are skipped (meter-neutral -- they
+    had nothing to charge), and with a pushed-down filter, partitions
+    whose min/max id hull cannot intersect the predicate's qualifying
+    range are skipped too -- their neighbors would be ANDed away inside
+    the kernel, so ids are unchanged while their page I/O is genuinely
+    saved (statistics pushdown; the meter records the smaller read).
+
+    Accounting is otherwise the monolithic resident path's, verbatim:
+    the decoded-page LRU (entries namespaced ``(partition, page)``) is
+    split over the global page set, misses are charged once with
+    requests per contiguous global run, and the decode matrix backfills
+    the cache only when there are misses to backfill.
+
+    Dispatch is adaptive (``SHARD_MIN_PAGES``): above the threshold the
+    SPMD tail runs, below it the **degenerate single-shard tail** --
+    the monolithic resident kernels over the single-device stacked plan,
+    with the cross-tick bitmap buffer pool and ``want_ids`` elision
+    intact -- so small dispatches never pay the multi-executable launch
+    cost.  Both tails produce identical planes.
+
+    ``pages`` is the caller's already-deduplicated page set (the fused
+    entry computes it for its empty-batch check; recomputing it here was
+    a measurable per-dispatch cost).
+    """
+    ps = col.page_size
+    qual = filter_plan.qual_range() if filter_plan is not None else None
+    owner, mask = parts.prune(pages, qual)
+    if mask is not None:
+        pages = pages[mask]
+        if pages.size == 0:  # every partition statistics-pruned
+            return PAC(target_page_size)
+    stack_idx = _stack_index(parts, pages, owner)
+    cache = live_cache(col)
+    if cache is None:
+        hits, miss = {}, [int(p) for p in pages]
+    else:
+        hits, miss = cache.split(pages, owner=owner)
+    _charge_pages(col, miss, meter)
+    n_words = -(-num_targets // 32)
+    want_ids = cache is not None and bool(miss)
+    # requested rows: with statistics pruning, rows whose page was
+    # dropped cannot pass the predicate and are dropped with it
+    rows = intervals_to_ids((los, his))
+    page_of = rows // ps
+    pidx = np.searchsorted(pages, page_of)
+    if mask is not None:
+        ok = pidx < len(pages)
+        ok &= pages[np.minimum(pidx, len(pages) - 1)] == page_of
+        if not ok.all():
+            rows, page_of, pidx = rows[ok], page_of[ok], pidx[ok]
+    g, ppd, dev_of_page, per_dev = _shard_width(parts, owner)
+    if g == 1:
+        # single-shard tail: exactly the monolithic resident dispatch,
+        # addressed through the stacked partition plan
+        arrays, _ = parts.device_plan_single(engine)
+        gidx = (pidx * ps + (rows - page_of * ps)).astype(np.int32)
+        total = len(gidx)
+        pad = size_class(total, RANGE_CLASS_MIN) - total
+        if pad:
+            gidx = np.concatenate([gidx, np.zeros(pad, np.int32)])
+        p_pad = _page_class(len(pages), parts.stack_rows)
+        staged = np.zeros(p_pad + len(gidx) + 1, np.int32)
+        staged[:len(pages)] = stack_idx
+        staged[p_pad:-1] = gidx
+        staged[-1] = total
+        jargs = arrays + (jnp.asarray(staged),)
+        if filter_plan is None:
+            fn = (K.fused_gather_decode_bitmap_batch if engine == "pallas"
+                  else R.fused_gather_batch_ref)
+            out = fn(*jargs, _words_buffer(engine, n_words),
+                     page_size=ps, n_words=n_words, p_pad=p_pad,
+                     want_ids=want_ids)
+        else:
+            from repro.kernels.label_filter import kernel as LK
+            from repro.kernels.label_filter import ref as LR
+            fwords = filter_plan.device_bitmap(engine, n_words)
+            fn = (LK.fused_gather_decode_filter_bitmap_batch
+                  if engine == "pallas" else LR.fused_gather_filter_batch_ref)
+            out = fn(*jargs, fwords, _words_buffer(engine, n_words),
+                     page_size=ps, n_words=n_words, p_pad=p_pad,
+                     want_ids=want_ids)
+        if want_ids:
+            words, ids = out
+            mat = np.asarray(ids, np.int64)
+            pos_of = {int(p): i for i, p in enumerate(pages)}
+            for p in miss:
+                i = pos_of[p]
+                cache.put(p, mat[i, :col.pages[p].count].copy(),
+                          part=int(owner[i]))
+        else:
+            words = out
+        host_words = np.asarray(words)
+        _WORDS_POOL[(engine, n_words)] = words  # reuse next dispatch
+        return PAC.from_dense_bitmap(host_words, target_page_size)
+    # SPMD tail: bucket per device and dispatch across the mesh
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec
+    from repro.kernels.shard import sharded_fused_entry
+    mesh, plan, pmax = parts.device_plan(engine)
+    block0 = dev_of_page * (ppd * pmax)
+    local_idx = (stack_idx - block0).astype(np.int32)
+    # pidx already maps each row to its page's slot; gather its device
+    # from there instead of a second searchsorted over all rows
+    dev_of_row = dev_of_page[pidx]
+    dev_page_start = np.searchsorted(dev_of_page, np.arange(g))
+    base_local = pidx - dev_page_start[dev_of_row]
+    gidx = (base_local * ps + (rows - page_of * ps)).astype(np.int32)
+    row_lists = [gidx[dev_of_row == i] for i in range(g)]
+    p_pad = _page_class(int(per_dev.max()), ppd * pmax)
+    t_pad = size_class(max(len(x) for x in row_lists), RANGE_CLASS_MIN)
+    staged = np.zeros((g, p_pad + t_pad + 1), np.int32)
+    for i in range(g):
+        sel = local_idx[dev_of_page == i]
+        staged[i, :len(sel)] = sel
+        staged[i, p_pad:p_pad + len(row_lists[i])] = row_lists[i]
+        staged[i, -1] = len(row_lists[i])
+    jstaged = jax.device_put(
+        staged, NamedSharding(mesh, PartitionSpec("part", None)))
+    fargs = ()
+    if filter_plan is not None:
+        fargs = (filter_plan.device_bitmap_sharded(engine, n_words, mesh),)
+    fn = sharded_fused_entry(mesh, engine, ps, n_words, p_pad, want_ids,
+                             filter_plan is not None)
+    out = fn(*plan, jstaged, *fargs)
+    if want_ids:
+        planes, ids = out
+        mat = np.asarray(ids, np.int64)  # [g, p_pad, ps]
+        pos = {int(p): (int(dev_of_page[i]),
+                        i - int(dev_page_start[dev_of_page[i]]),
+                        int(owner[i]))
+               for i, p in enumerate(pages)}
+        for p in miss:
+            d, s, k = pos[p]
+            cache.put(p, mat[d, s, :col.pages[p].count].copy(), part=k)
+    else:
+        planes = out
+    merged = np.bitwise_or.reduce(np.asarray(planes, np.uint32), axis=0)
+    return PAC.from_dense_bitmap(merged, target_page_size)
+
+
 def _retrieve_pac_batch_fused(col: DeltaColumn, los, his,
                               target_page_size: int, num_targets: int,
                               meter, engine: str, filter_plan=None,
@@ -350,11 +646,29 @@ def _retrieve_pac_batch_fused(col: DeltaColumn, los, his,
                          f"{engine!r}")
     if resident is None:
         resident = DEVICE_RESIDENT
+    parts = live_partitions(col)
+    if parts is not None and resident:
+        # partition plane attached: shard the fused dispatch across the
+        # device mesh (the monolithic resident path is its 1-partition
+        # degenerate case; resident=False keeps the per-dispatch pack
+        # baseline below as the single-device oracle)
+        return _retrieve_pac_batch_sharded(col, parts, los, his, pages,
+                                           target_page_size, num_targets,
+                                           meter, engine, filter_plan)
     cache = live_cache(col)
+    part_of = {}
     if cache is None:
         hits, miss = {}, [int(p) for p in pages]
     else:
-        hits, miss = cache.split(pages)
+        # a partitioned column's LRU entries live in the (partition,
+        # page) namespace on every path -- the non-resident oracle must
+        # probe/fill the same keys the sharded dispatches use, or one
+        # column's cache splits into two disjoint namespaces
+        # (double-charging warm pages)
+        owner = parts.part_of_pages(pages) if parts is not None else None
+        if owner is not None:
+            part_of = {int(p): int(o) for p, o in zip(pages, owner)}
+        hits, miss = cache.split(pages, owner=owner)
     _charge_pages(col, miss, meter)
     n_words = -(-num_targets // 32)
     if resident:
@@ -394,21 +708,22 @@ def _retrieve_pac_batch_fused(col: DeltaColumn, los, his,
             mat = np.asarray(ids, np.int64)
             pos_of = {int(p): i for i, p in enumerate(pages)}
             for p in miss:
-                cache.put(p, mat[pos_of[p], :col.pages[p].count].copy())
+                cache.put(p, mat[pos_of[p], :col.pages[p].count].copy(),
+                          part=part_of.get(p))
         else:
             words = out
         host_words = np.asarray(words)
         _WORDS_POOL[(engine, n_words)] = words  # reuse next dispatch
         return PAC.from_dense_bitmap(host_words, target_page_size)
     m = len(miss)
-    m_pad = _next_pow2(m)
+    m_pad = next_pow2(m)
     args = pack_page_list(col, miss)
     if m_pad - m:
         args = tuple(np.concatenate(
             [a, np.zeros((m_pad - m,) + a.shape[1:], a.dtype)])
             for a in args)
     hit_list = [int(p) for p in pages if int(p) in hits]
-    cached = np.zeros((_next_pow2(len(hit_list)), ps), np.int32)
+    cached = np.zeros((next_pow2(len(hit_list)), ps), np.int32)
     for i, p in enumerate(hit_list):
         d = hits[p]
         cached[i, :len(d)] = d
@@ -440,7 +755,8 @@ def _retrieve_pac_batch_fused(col: DeltaColumn, los, his,
     if cache is not None and miss:
         mat = np.asarray(ids, np.int64)
         for i, p in enumerate(miss):
-            cache.put(p, mat[i, :col.pages[p].count].copy())
+            cache.put(p, mat[i, :col.pages[p].count].copy(),
+                      part=part_of.get(p))
     return PAC.from_dense_bitmap(np.asarray(words), target_page_size)
 
 
@@ -531,7 +847,7 @@ def decode_range_to_bitmap(col: DeltaColumn, lo: int, hi: int,
         "fused path requires page-aligned ranges"
     p0, p1 = lo // ps, -(-hi // ps)
     args = [jnp.asarray(a) for a in pack_pages(col, p0, p1)]
-    words_out = _next_multiple(n_words, K.WORD_TILE)
+    words_out = next_multiple(n_words, K.WORD_TILE)
     if use_pallas:
         bm = K.fused_decode_bitmap(*args, jnp.int32(base), page_size=ps,
                                    words_out=words_out)
@@ -545,10 +861,10 @@ def ids_to_bitmap(ids: np.ndarray, base: int, n_words: int,
                   use_pallas: bool = True) -> np.ndarray:
     """Standalone bitmap construction from sorted ids (32-aligned base)."""
     assert base % 32 == 0
-    n = _next_multiple(max(len(ids), 1), K.ID_TILE)
+    n = next_multiple(max(len(ids), 1), K.ID_TILE)
     padded = np.zeros(n, np.int32)
     padded[:len(ids)] = ids
-    words_out = _next_multiple(n_words, K.WORD_TILE)
+    words_out = next_multiple(n_words, K.WORD_TILE)
     if use_pallas:
         bm = K.bitmap_pallas(jnp.asarray(padded), jnp.int32(len(ids)),
                              jnp.int32(base), n_words=words_out)

@@ -5,20 +5,17 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.encoding import RleColumn
+from repro.kernels._pad import next_multiple
 
 from . import kernel as K
 from . import ref as R
 
 
-def _next_multiple(x: int, m: int) -> int:
-    return -(-x // m) * m
-
-
 def rle_to_bitmap(col: RleColumn, want: bool = True,
                   use_pallas: bool = True) -> np.ndarray:
     """Whole-column bitmap of ``label == want``; uint32 words."""
-    n_words = _next_multiple(-(-col.count // 32) or 1, K.WORD_TILE)
-    n_pos = _next_multiple(col.positions.size, 128)
+    n_words = next_multiple(-(-col.count // 32) or 1, K.WORD_TILE)
+    n_pos = next_multiple(col.positions.size, 128)
     pos = np.full((1, n_pos), col.count, np.int32)
     pos[0, :col.positions.size] = col.positions
     meta = np.array([[int(col.first_value), int(want), col.count]], np.int32)

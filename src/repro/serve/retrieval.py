@@ -55,7 +55,8 @@ class GraphRetriever:
                  max_neighbors: int = 2, tokens_per_neighbor: int = 16,
                  meter=None, engine: str = "numpy",
                  page_cache_pages: Optional[int] = 256,
-                 filter_vt=None, filter_cond: Optional[Cond] = None):
+                 filter_vt=None, filter_cond: Optional[Cond] = None,
+                 partitions: Optional[int] = None):
         self.adj = adj
         self.tokens_col = tokens_col
         self.max_neighbors = max_neighbors
@@ -75,6 +76,13 @@ class GraphRetriever:
         col = adj.table[adj.value_col]
         self._cache_col = col if isinstance(col, DeltaIntColumn) else None
         if self._cache_col is not None:
+            if partitions is not None:
+                # explicit partition count for the adjacency value column:
+                # every decode this retriever issues shards across the
+                # partition plane's device mesh (None keeps whatever is
+                # attached / the REPRO_PARTITIONS default)
+                from repro.core.partition import partition_column
+                partition_column(self._cache_col.encoded, partitions)
             if page_cache_pages is not None:
                 attach_page_cache(self._cache_col, page_cache_pages)
             else:
@@ -146,6 +154,13 @@ class GraphRetriever:
                 # packed column crosses to the device once per epoch,
                 # not once per dispatch (kernel engines only)
                 s["device_mirror"] = packed.device_stats()
+            from repro.core.partition import live_partitions
+            parts = live_partitions(self._cache_col.encoded)
+            if parts is not None:
+                # partition plane: shard count, per-dispatch pruning
+                # (partitions_pruned counts partitions skipped because
+                # their range or statistics hull missed the batch)
+                s["partitions"] = parts.stats()
         if self.label_filter is not None:
             s["filter"] = {"cond": repr(self.label_filter.cond),
                            "considered": self.filter_considered,

@@ -140,17 +140,23 @@ def test_lru_rows_feed_the_kernel_not_redecoded(adj, batch, engine):
         cache.clear()
         clean = retrieve_neighbors_batch(adj, batch, TPS, engine=engine,
                                          fused=True, resident=False)
-        pages = sorted(p for p in cache._pages)
-        victim = pages[0]
+        # keys are plain pages, or (partition, page) when REPRO_PARTITIONS
+        # routes this column through the partition plane
+        keys = sorted(cache._pages, key=lambda k: k if isinstance(k, tuple)
+                      else (-1, k))
+        victim_key = keys[0]
+        victim, part = ((victim_key[1], victim_key[0])
+                        if isinstance(victim_key, tuple)
+                        else (victim_key, None))
         fake = np.full(col.encoded.pages[victim].count, N - 1, np.int64)
-        cache.put(victim, fake)
+        cache.put(victim, fake, part=part)
         poisoned = retrieve_neighbors_batch(adj, batch, TPS, engine=engine,
                                             fused=True, resident=False)
         assert poisoned != clean
         assert int(N - 1) in poisoned.to_ids().tolist()
         # resident path: hits decode on device from the packed mirror --
         # the poisoned host rows never reach the kernel
-        cache.put(victim, fake)
+        cache.put(victim, fake, part=part)
         immune = retrieve_neighbors_batch(adj, batch, TPS, engine=engine,
                                           fused=True, resident=True)
         assert immune == clean
