@@ -1,0 +1,116 @@
+"""Fused multi-hop traversal (PR 6): one-dispatch k-hop vs host loop.
+
+Two sections:
+
+* ``traversal_khop_*`` -- the fused k-hop (all hops one scan-stepped
+  dispatch over the device-resident frontier plane, no host-side id
+  materialization between hops) against the host-loop oracle on the
+  same engine (per hop: offsets gather, device decode, host
+  visited-mask bookkeeping), per engine and hop count.  The acceptance
+  rows: >= 2x at hops >= 2 on the kernel engines.
+
+* ``traversal_steady_*`` -- a 100-traversal steady-state run over
+  varying seed batches: asserts **zero jit retraces** (seed vectors pad
+  to pow2 size classes; the hop count is a static scan length) and
+  reports the single-round-trip dispatch counters.
+
+Every timed comparison is preceded by a bit-identity + IOMeter-identity
+assertion against the numpy oracle -- fusion must be invisible except
+in wall time.  ``REPRO_BENCH_SMOKE=1`` shrinks the graph so CI can run
+the suite in seconds.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import (BY_SRC, ENC_GRAPHAR, IOMeter, build_adjacency,
+                        k_hop)
+from repro.kernels import _pad
+from repro.kernels.traversal import ops as trav
+
+from .util import emit, timeit
+
+SMOKE = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+N = 2_000 if SMOKE else 20_000
+DEG = 8 if SMOKE else 16
+PAGE = 512 if SMOKE else 2048
+SEEDS = 8 if SMOKE else 64       # a serving tick's worth of seeds
+HOP_COUNTS = (1, 2) if SMOKE else (1, 2, 3)
+STEADY_TRAVERSALS = 10 if SMOKE else 100
+
+
+def _fixture():
+    from repro.data.synthetic import powerlaw_graph
+    src, dst = powerlaw_graph(N, DEG, locality=0.85, seed=11)
+    return build_adjacency(src, dst, N, N, BY_SRC, ENC_GRAPHAR,
+                           page_size=PAGE)
+
+
+def _paired(fa, fb, reps=32):
+    """Interleaved A/B timing (microseconds) + drift-robust speedup
+    (median of per-pair ratios, within-pair order alternating; see
+    bench_resident._paired for the full rationale)."""
+    fa(), fb(), fa(), fb()           # warm jit caches both ways
+    ta, tb = [], []
+    for i in range(reps):
+        pair = (fa, ta), (fb, tb)
+        for fn, acc in (pair if i % 2 == 0 else pair[::-1]):
+            t0 = time.perf_counter()
+            fn()
+            acc.append(time.perf_counter() - t0)
+    ratios = sorted(b / a for a, b in zip(ta, tb))
+    return (min(ta) * 1e6, min(tb) * 1e6, ratios[len(ratios) // 2])
+
+
+def _check_identity(adj, seeds, hops, engine):
+    """Fusion must not change ids or meters (vs host loop + oracle)."""
+    m_fus, m_loop, m_np = IOMeter(), IOMeter(), IOMeter()
+    fus = k_hop(adj, seeds, hops, m_fus, engine=engine)
+    loop = k_hop(adj, seeds, hops, m_loop, engine=engine, fused=False)
+    want = k_hop(adj, seeds, hops, m_np)
+    assert np.array_equal(fus, want) and np.array_equal(loop, want), \
+        "fused k-hop must match the host oracle"
+    assert (m_fus.nbytes, m_fus.nrequests) == (m_np.nbytes, m_np.nrequests), \
+        "fused k-hop must charge exactly what the numpy oracle does"
+
+
+def run() -> None:
+    adj = _fixture()
+
+    # ---- fused k-hop vs per-hop host loop (the acceptance rows) -----------
+    for engine in ("jax", "pallas"):
+        for hops in HOP_COUNTS:
+            seeds = np.random.default_rng(hops).integers(0, N, SEEDS)
+            _check_identity(adj, seeds, hops, engine)
+            t_fus, t_loop, speedup = _paired(
+                lambda: k_hop(adj, seeds, hops, engine=engine),
+                lambda: k_hop(adj, seeds, hops, engine=engine,
+                              fused=False))
+            emit(f"traversal_khop_{engine}_h{hops}", t_fus,
+                 f"hostloop_us={t_loop:.2f};"
+                 f"fused_over_hostloop={speedup:.2f};io_identical=1")
+            emit(f"hostloop_khop_{engine}_h{hops}", t_loop, "")
+
+    # ---- steady-state serving: zero retraces over 100 traversals ----------
+    for engine in ("jax", "pallas"):
+        rng = np.random.default_rng(5)
+        sizes = rng.integers(2, 33, size=STEADY_TRAVERSALS)
+        batches = [rng.integers(0, N, s) for s in sizes]
+        for vs in batches:           # warm the jit size classes
+            k_hop(adj, vs, 2, engine=engine)
+        plan = trav.traversal_plan(adj, engine)
+        d0, r0 = plan.dispatches, plan.device_roundtrips
+        before = _pad.trace_count()
+        t0 = timeit(lambda: [k_hop(adj, vs, 2, engine=engine)
+                             for vs in batches], repeats=3, warmup=0)
+        retraces = _pad.trace_count() - before
+        assert retraces == 0, \
+            f"steady-state traversal retraced {retraces}x on {engine}"
+        emit(f"traversal_steady_{engine}_{STEADY_TRAVERSALS}trav",
+             t0 / STEADY_TRAVERSALS,
+             f"traversals={STEADY_TRAVERSALS};retraces=0;"
+             f"roundtrips_per_traversal="
+             f"{(plan.device_roundtrips - r0) // max(plan.dispatches - d0, 1)}")

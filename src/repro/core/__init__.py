@@ -7,6 +7,7 @@ from .encoding import (DEFAULT_PAGE_SIZE, DeltaColumn, DeltaPage, PackedPages,
                        delta_decode_page, delta_encode_column,
                        delta_encode_page, pack_column, rle_decode_bool,
                        rle_encode_bool)
+from .frontier import Frontier
 from .labels import (And, Cond, CondProgram, L, LabelFilter, Not, Or,
                      bitmap_to_intervals, charge_label_metadata,
                      compile_cond, complex_filter_intervals, eval_program,

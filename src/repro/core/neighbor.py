@@ -190,29 +190,127 @@ def neighbor_properties(adj: AdjacencyTable, v: int, vt: VertexTable,
 
 def neighbor_properties_batch(adj: AdjacencyTable, vs, vt: VertexTable,
                               prop: str, meter=None,
-                              engine: str = "numpy") -> np.ndarray:
+                              engine: str = "numpy",
+                              filter=None,
+                              resident: bool | None = None,
+                              partitions: int | None = None) -> np.ndarray:
     """Batched §4.1 workflow: one retrieval + one pushdown fetch for the
-    whole batch's merged PAC (values in ascending neighbor-id order)."""
-    pac = retrieve_neighbors_batch(adj, vs, vt.page_size, meter, engine)
+    whole batch's merged PAC (values in ascending neighbor-id order).
+
+    ``filter`` / ``resident`` / ``partitions`` thread straight through to
+    the batched retrieval (the same routing knobs
+    :func:`retrieve_neighbors_batch` honors): a label predicate pushed
+    into the retrieval dispatch, the transfer regime, and an explicit
+    partition count for the adjacency value column."""
+    _apply_partitions(adj, partitions)
+    pac = retrieve_neighbors_batch(adj, vs, vt.page_size, meter, engine,
+                                   filter=filter, resident=resident)
     return fetch_properties(pac, vt, prop, meter)
 
 
+def _apply_partitions(adj: AdjacencyTable, partitions: int | None) -> None:
+    """Explicit partition count for the adjacency value column (None
+    keeps whatever is attached / the ``REPRO_PARTITIONS`` default)."""
+    if partitions is None:
+        return
+    col = adj.table[adj.value_col]
+    if not isinstance(col, DeltaIntColumn):
+        raise TypeError("partitions= requires a delta-encoded column")
+    from .partition import partition_column
+    partition_column(col.encoded, partitions)
+
+
+def _per_hop_filters(filter, hops: int) -> list:
+    """Normalize ``filter=`` to one entry per hop: a single
+    ``LabelFilter`` applies to every hop; a sequence gives hop ``h`` its
+    own predicate (None entries leave that hop unfiltered)."""
+    if filter is None:
+        return [None] * hops
+    if isinstance(filter, (list, tuple)):
+        if len(filter) != hops:
+            raise ValueError(f"filter sequence has {len(filter)} entries "
+                             f"for {hops} hops")
+        return list(filter)
+    return [filter] * hops
+
+
 def k_hop(adj: AdjacencyTable, seeds: np.ndarray, hops: int,
-          meter=None, engine: str = "numpy") -> np.ndarray:
+          meter=None, engine: str = "numpy",
+          include_seeds: bool = True,
+          filter=None,
+          fused: bool | None = None,
+          resident: bool | None = None,
+          partitions: int | None = None) -> np.ndarray:
     """Multi-hop expansion (IC-8-style traversals). Returns unique IDs.
 
-    Whole-frontier: each hop is one batched retrieval over the current
-    frontier (vectorized offsets gather + page-deduplicated decode), not a
-    Python loop over vertices."""
-    frontier = np.unique(np.asarray(seeds, np.int64))
-    seen = frontier
-    for _ in range(hops):
+    On the kernel engines the k hops run as **one** fused
+    ``lax.scan``-stepped dispatch over the device-resident frontier
+    plane (:mod:`repro.kernels.traversal`): the frontier bitmap is
+    expanded, predicate-ANDed, and visited-ANDNOTed on device every hop,
+    with no host-side id materialization between hops.  ``fused=False``
+    (and the numpy engine) keeps the **host-loop oracle**: each hop one
+    batched retrieval over the current frontier with a boolean visited
+    mask over the id space -- bit-identical ids and IOMeter to the fused
+    path.
+
+    ``include_seeds`` keeps the seed ids in the result (the historical
+    behavior); ``include_seeds=False`` returns only discovered vertices.
+    ``filter`` -- a :class:`~repro.core.labels.LabelFilter` over the
+    value-side table, or a per-hop sequence of them -- drops
+    non-qualifying ids from each hop's frontier (ANDed in place on the
+    fused path; filtered ids stay unvisited and remain reachable via a
+    later hop).  ``resident`` / ``partitions`` follow
+    :func:`retrieve_neighbors_batch`'s routing knobs."""
+    _apply_partitions(adj, partitions)
+    if engine == "numpy" and fused:
+        raise ValueError("fused path requires a kernel engine (jax/pallas)")
+    filts = _per_hop_filters(filter, hops)
+    if fused is None:
+        from repro.kernels.pac_decode.ops import DEVICE_RESIDENT
+        from repro.kernels.traversal.ops import plan_supported
+        fused = (engine != "numpy" and plan_supported(adj)
+                 and adj.num_key_vertices == adj.num_value_vertices
+                 and (resident if resident is not None
+                      else DEVICE_RESIDENT))
+    if fused:
+        from repro.kernels.traversal.ops import k_hop_fused
+        return k_hop_fused(adj, seeds, hops, filts, meter, engine,
+                           include_seeds)
+    seeds = np.unique(np.asarray(seeds, np.int64))
+    if adj.num_value_vertices is None or adj.num_key_vertices is None:
+        # no known id space: legacy set-based bookkeeping
+        frontier, seen = seeds, seeds
+        for h in range(hops):
+            if frontier.size == 0:
+                break
+            if filts[h] is not None:
+                filts[h].charge(meter)
+            nbrs = neighbor_ids_batch(adj, frontier, meter, engine=engine)
+            if filts[h] is not None and nbrs.size:
+                nbrs = nbrs[filts[h].mask_ids(nbrs, engine)]
+            frontier = np.setdiff1d(nbrs, seen, assume_unique=True)
+            seen = np.union1d(seen, frontier)
+        return seen if include_seeds \
+            else seen[~np.isin(seen, seeds, assume_unique=True)]
+    # host oracle: boolean visited mask over the id space -- O(ids) per
+    # hop instead of the O(n log n) setdiff1d/union1d re-sorts
+    m = max(int(adj.num_key_vertices), int(adj.num_value_vertices))
+    visited = np.zeros(m, bool)
+    visited[seeds] = True
+    frontier = seeds
+    for h in range(hops):
         if frontier.size == 0:
             break
+        if filts[h] is not None:
+            filts[h].charge(meter)
         nbrs = neighbor_ids_batch(adj, frontier, meter, engine=engine)
-        frontier = np.setdiff1d(nbrs, seen, assume_unique=True)
-        seen = np.union1d(seen, frontier)
-    return seen
+        if filts[h] is not None and nbrs.size:
+            nbrs = nbrs[filts[h].mask_ids(nbrs, engine)]
+        frontier = nbrs[~visited[nbrs]]
+        visited[frontier] = True
+    if not include_seeds:
+        visited[seeds] = False
+    return np.flatnonzero(visited).astype(np.int64)
 
 
 def degrees_topk(adj: AdjacencyTable, k: int = 1) -> np.ndarray:

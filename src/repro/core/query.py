@@ -178,25 +178,48 @@ def is3_acero(b: SnbBaseline, person: int,
 # IC-8: latest 20 replies to any message created by `person`
 # --------------------------------------------------------------------------
 
+def _traversal_fusable(adj) -> bool:
+    """Whether the fused traversal plane may serve this adjacency under
+    the session's transfer regime (``DEVICE_RESIDENT`` read at call time
+    so env/monkeypatch overrides are honored)."""
+    from repro.kernels.pac_decode import ops as pac_ops
+    from repro.kernels.traversal.ops import plan_supported
+    return pac_ops.DEVICE_RESIDENT and plan_supported(adj)
+
+
+def _two_hop_fusable(adj_a, adj_b, vt: VertexTable) -> bool:
+    return (_traversal_fusable(adj_a) and _traversal_fusable(adj_b)
+            and adj_a.num_value_vertices == adj_b.num_key_vertices
+            and vt.page_size % 32 == 0)
+
+
 def ic8_graphar(g: Graph, person: int, limit: int = 20,
                 meter: Optional[IOMeter] = None,
                 engine: str = "numpy",
                 reply_label: Optional[str] = None
                 ) -> Tuple[np.ndarray, np.ndarray]:
     # hop 1: messages created by person  (hasCreator, incoming = by_dst)
-    created = g.adjacency("message-hasCreator-person", BY_DST) \
-        .neighbor_ids(person, meter)
-    # hop 2: replies to those messages (replyOf, incoming = by_dst) as one
-    # batched retrieval: vectorized offsets gather + page-deduplicated
-    # multi-range decode -> merged PAC over the message table's pages.
-    # With `reply_label` the label predicate is pushed down into that same
-    # retrieval (one fused dispatch on kernel engines) instead of a host
-    # round-trip between filtering and retrieval.
+    creator_adj = g.adjacency("message-hasCreator-person", BY_DST)
+    # hop 2: replies to those messages (replyOf, incoming = by_dst)
     reply_adj = g.adjacency("message-replyOf-message", BY_DST)
     vt = g.vertex("message")
     filt = LabelFilter(vt, L(reply_label)) if reply_label else None
-    pac = retrieve_neighbors_batch(reply_adj, created, vt.page_size, meter,
-                                   engine, filter=filt)
+    if engine != "numpy" and _two_hop_fusable(creator_adj, reply_adj, vt):
+        # both hops + the label AND as ONE device dispatch over the
+        # adjacencies' resident traversal plans: the created-message
+        # frontier never comes back to the host between hops
+        # (kernels/traversal.two_hop_pac; oracle I/O replayed for the
+        # meter)
+        from repro.kernels.traversal.ops import two_hop_pac
+        pac = two_hop_pac(creator_adj, reply_adj, [person], vt.page_size,
+                          filt, meter, engine)
+    else:
+        # staged host path: hop-1 decode, then one batched hop-2
+        # retrieval (vectorized offsets gather + page-deduplicated
+        # multi-range decode) with the label predicate pushed down
+        created = creator_adj.neighbor_ids(person, meter)
+        pac = retrieve_neighbors_batch(reply_adj, created, vt.page_size,
+                                       meter, engine, filter=filt)
     replies = pac.to_ids()
     if replies.size == 0:
         return replies, replies
@@ -255,6 +278,16 @@ def bi2_graphar(g: Graph, tagclass: str,
     # BI-2 counts edges, so no PAC/set collapse here).
     bounds = adj.offsets_at(np.concatenate([starts, ends]), meter)
     los, his = bounds[:starts.size], bounds[starts.size:]
+    if engine != "numpy" and _traversal_fusable(adj):
+        # counting expansion over the resident traversal plan: the
+        # interval frontier ships as O(intervals) ids and the per-tag
+        # edge counts come back directly -- no per-edge id
+        # materialization on the host
+        from repro.kernels.traversal.ops import frontier_edge_counts
+        counts = frontier_edge_counts(adj, starts, ends, los, his, meter,
+                                      engine)
+        counts[tag_classes != cls_id] = 0
+        return {int(t): int(counts[t]) for t in np.flatnonzero(counts)}
     tags = decode_edge_ranges(adj, los, his, meter, engine)
     tags = tags[tag_classes[tags] == cls_id]
     keys, cnts = np.unique(tags, return_counts=True)

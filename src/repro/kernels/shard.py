@@ -81,6 +81,49 @@ def sharded_fused_entry(mesh, engine: str, page_size: int, n_words: int,
 
 
 @functools.lru_cache(maxsize=None)
+def sharded_khop_entry(mesh, engine: str, n_out: int):
+    """Jitted sharded fused k-hop (memoized per mesh + id space).
+
+    ``(skey_sorted, svoff, seed_ids, filt_words) -> (visited [g, n_out],
+    hop_planes [g, hops, n_out], hop_sizes [g, hops])``: the traversal
+    plan's per-partition rank layouts are stacked partition-major and
+    sharded ``P('part')`` (``TraversalPlan.sharded_arrays``); seed ids
+    and the per-hop predicate words are replicated.  Each hop every
+    shard rank-expands its partitions' rows into a full-size frontier
+    plane (padding keys select nothing), an all-reduce ``pmax`` merges
+    the planes across the mesh (a vertex may be reached via several
+    partitions), and the filter-AND / visited-ANDNOT / scan step run
+    replicated -- so the hop-to-hop frontier never leaves the device
+    mesh.  Every shard returns identical planes; the host takes row 0.
+    """
+    from repro.kernels.traversal import kernel as TK
+    from repro.kernels.traversal import ref as TR
+
+    def body(skey_sorted, svoff, seed_ids, filt_words):
+        note_trace("sharded_khop")
+        f0 = TR._seed_plane(seed_ids, n_out)
+
+        def hop(carry, fw):
+            frontier, visited = carry
+            if engine == "pallas":
+                plane = TK._expand_pallas(skey_sorted, svoff, frontier,
+                                          n_out=n_out)
+            else:
+                plane = TR.expand_plane_ref(skey_sorted, svoff, frontier)
+            plane = jax.lax.pmax(plane, "part")
+            nxt = plane * TR._filter_bits(fw, n_out) * (1 - visited)
+            return (nxt, visited + nxt), nxt
+
+        (_, visited), planes = jax.lax.scan(hop, (f0, f0), filt_words)
+        return visited[None], planes[None], planes.sum(axis=1)[None]
+
+    return jax.jit(shard_map(body, mesh=mesh,
+                             in_specs=(_PART, _PART, _REPL, _REPL),
+                             out_specs=(_PART, _PART, _PART),
+                             check_rep=False))
+
+
+@functools.lru_cache(maxsize=None)
 def sharded_decode_entry(mesh, engine: str, page_size: int, p_pad: int):
     """Jitted sharded page-matrix decode (the non-fused batched path).
 

@@ -1,0 +1,8 @@
+"""Fused on-device multi-hop traversal kernels.
+
+The frontier stays on device across hops: one ``lax.scan``-stepped
+dispatch expands the current frontier plane through the resident edge
+value column (``TraversalPlan``), ANDs per-hop predicate bitmaps in
+place, and accumulates the visited plane -- no host-side id
+materialization between hops.  See :mod:`repro.kernels.traversal.ops`.
+"""

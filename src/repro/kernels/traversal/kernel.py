@@ -1,0 +1,117 @@
+"""Pallas traversal kernels (interpret-mode on CPU, like pac_decode).
+
+Same contracts as :mod:`repro.kernels.traversal.ref` -- the hop body
+(frontier gather through ``key_sorted`` -> bit-pack -> popcount-rank
+expand -> predicate AND -> visited ANDNOT) runs inside a
+``pallas_call``; the ``lax.scan`` over hops, seed-plane construction,
+and word packing stay in the surrounding jitted entry, so k hops are
+still one dispatch with no host round-trips between hops.
+
+A TPU build would tile the rank expansion over the value id space the
+way ``_bitmap_tile`` tiles the PAC kernels; on CPU/interpret the
+single-grid body is exact and fast enough to beat the per-hop host
+loop.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels._pad import note_trace
+
+from .ref import _filter_bits, _pack_words, _seed_plane, expand_counts
+
+
+def _hop_kernel(ks_ref, voff_ref, f_ref, vis_ref, fw_ref, nxt_ref, *,
+                n_out):
+    """One hop: rank-expand the frontier plane, AND the predicate bits,
+    ANDNOT the visited plane.  All planes live in VMEM; only the
+    newly-discovered plane is written out."""
+    plane = (expand_counts(ks_ref[...], voff_ref[...], f_ref[...])
+             > 0).astype(jnp.int32)
+    bits = _filter_bits(fw_ref[...], n_out)
+    nxt_ref[...] = plane * bits * (1 - vis_ref[...])
+
+
+def _hop_pallas(key_sorted, voff, frontier, visited, fwords, *,
+                n_out: int, interpret: bool = True):
+    kern = functools.partial(_hop_kernel, n_out=n_out)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((n_out,), jnp.int32),
+        interpret=interpret,
+    )(key_sorted, voff, frontier, visited, fwords)
+
+
+@functools.partial(jax.jit, static_argnames=("n_out", "interpret"))
+def khop_scan_pallas(key_sorted, voff, seed_ids, filt_words, *,
+                     n_out: int, interpret: bool = True):
+    """Fused k-hop (see :func:`...ref.khop_scan_ref`): one scan-stepped
+    dispatch, the hop body a pallas kernel."""
+    note_trace("khop_pallas")
+    f0 = _seed_plane(seed_ids, n_out)
+
+    def hop(carry, fw):
+        frontier, visited = carry
+        nxt = _hop_pallas(key_sorted, voff, frontier, visited, fw,
+                          n_out=n_out, interpret=interpret)
+        return (nxt, visited + nxt), nxt
+
+    (_, visited), planes = jax.lax.scan(hop, (f0, f0), filt_words)
+    return visited, planes, planes.sum(axis=1)
+
+
+def _expand_kernel(ks_ref, voff_ref, f_ref, out_ref):
+    out_ref[...] = (expand_counts(ks_ref[...], voff_ref[...], f_ref[...])
+                    > 0).astype(jnp.int32)
+
+
+def _expand_pallas(key_sorted, voff, frontier, *, n_out: int,
+                   interpret: bool = True):
+    return pl.pallas_call(
+        _expand_kernel,
+        out_shape=jax.ShapeDtypeStruct((n_out,), jnp.int32),
+        interpret=interpret,
+    )(key_sorted, voff, frontier)
+
+
+@functools.partial(jax.jit, static_argnames=("n_key", "n_mid", "n_out",
+                                             "n_words", "interpret"))
+def two_hop_pallas(ks_a, voff_a, ks_b, voff_b, seed_ids, filt_words, *,
+                   n_key: int, n_mid: int, n_out: int, n_words: int,
+                   interpret: bool = True):
+    """Heterogeneous two-hop chain, both expansions pallas kernels in
+    one dispatch (see :func:`...ref.two_hop_ref`)."""
+    note_trace("twohop_pallas")
+    f0 = _seed_plane(seed_ids, n_key)
+    mid = _expand_pallas(ks_a, voff_a, f0, n_out=n_mid,
+                         interpret=interpret)
+    out = _expand_pallas(ks_b, voff_b, mid, n_out=n_out,
+                         interpret=interpret)
+    return mid, _pack_words(out, n_words) & filt_words
+
+
+def _count_kernel(ks_ref, voff_ref, starts_ref, ends_ref, out_ref, *,
+                  n_key):
+    delta = jnp.zeros((n_key + 1,), jnp.int32) \
+        .at[starts_ref[...]].add(1, mode="drop") \
+        .at[ends_ref[...]].add(-1, mode="drop")
+    plane = (jnp.cumsum(delta)[:n_key] > 0).astype(jnp.int32)
+    out_ref[...] = expand_counts(ks_ref[...], voff_ref[...], plane)
+
+
+@functools.partial(jax.jit, static_argnames=("n_key", "n_out", "interpret"))
+def count_hop_pallas(key_sorted, voff, starts, ends, *, n_key: int,
+                     n_out: int, interpret: bool = True):
+    """Counting expansion (see :func:`...ref.count_hop_ref`) as one
+    pallas kernel: interval frontier -> per-target edge counts."""
+    note_trace("counthop_pallas")
+    kern = functools.partial(_count_kernel, n_key=n_key)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((n_out,), jnp.int32),
+        interpret=interpret,
+    )(key_sorted, voff, starts, ends)

@@ -1,0 +1,422 @@
+"""Dispatch layer of the fused traversal plane.
+
+A :class:`TraversalPlan` is the adjacency's device-resident expansion
+structure: the whole edge value column decoded **once** through the
+resident unpack plans (``pac_decode._decode_page_matrix`` -- on a
+partitioned column that routes through the sharded decode, so the plan
+build itself is a partition-plane dispatch), re-ordered so edge rows
+group by value id (``key_sorted`` + the segment index ``voff``, the
+scatter-free rank-expansion layout -- see
+:func:`repro.kernels.traversal.ref.expand_counts`).  The plan crosses
+to the device once per (column version, partitioning, engine);
+traversal dispatches then ship only padded seed-id vectors and per-hop
+predicate bitmap words.
+
+``k_hop_fused`` runs k hops as **one** ``lax.scan``-stepped dispatch
+(jnp ref or pallas hop kernels); with a partition plane attached and a
+multi-device mesh it dispatches through ``shard.sharded_khop_entry`` --
+edge rows sharded partition-major, per-hop planes ``pmax``-combined
+across the mesh.  ``two_hop_pac`` (IC-8's heterogeneous chain) and
+``frontier_edge_counts`` (BI-2's counting expansion) reuse the same
+plans.
+
+Accounting: the host loop (``core.neighbor.k_hop`` with
+``fused=False``) is the bit-identical oracle.  When a meter or a
+decoded-page LRU is attached, the fused path **replays** the oracle's
+I/O after its single dispatch -- per hop: predicate metadata charge,
+offsets gather, LRU split, miss-page charge, cache backfill from the
+plan's host decode -- so meters and cache evolution match the oracle
+exactly; with neither attached, nothing but the final visited plane
+(and the per-hop size vector) ever crosses back to the host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.encoding import DeltaColumn
+from repro.core.frontier import Frontier
+from repro.core.pac import PAC
+from repro.core.page_cache import live_cache
+from repro.core.partition import ensure_default_partitions, live_partitions
+from repro.kernels._pad import size_class
+from repro.kernels.pac_decode import ops as pac_ops
+
+from . import kernel as K
+from . import ref as R
+
+#: pow2 floor for the padded seed-id vector (same role as
+#: ``pac_ops.RANGE_CLASS_MIN``: steady-state traversals with small,
+#: varying seed batches share one jit size class).
+SEED_CLASS_MIN = 64
+
+#: pow2 floor for BI-2's padded interval vectors.
+INTERVAL_CLASS_MIN = 8
+
+
+def _kernel_column(adj) -> DeltaColumn:
+    from repro.core.table import DeltaIntColumn
+    col = adj.table[adj.value_col]
+    if not isinstance(col, DeltaIntColumn):
+        raise TypeError("traversal plans require a delta-encoded column")
+    ensure_default_partitions(col.encoded)
+    return col.encoded
+
+
+def plan_supported(adj) -> bool:
+    """Whether the fused traversal plane can serve this adjacency."""
+    from repro.core.table import DeltaIntColumn
+    return (adj.offsets is not None
+            and adj.num_value_vertices is not None
+            and isinstance(adj.table[adj.value_col], DeltaIntColumn))
+
+
+@dataclasses.dataclass
+class TraversalPlan:
+    """Device-resident expansion structure of one adjacency."""
+
+    col: DeltaColumn
+    n_key: int
+    n_value: int
+    host_vals: np.ndarray       # int64 [rows] -- decoded value column
+    key_of_row: np.ndarray      # int32 [rows] -- CSR key of each row
+    key_sorted: np.ndarray      # int32 [rows_pad] -- keys grouped by value
+    voff: np.ndarray            # int32 [n_value+1] -- value segments
+    #: engine -> (key_sorted, voff) on device (int32, monolithic).
+    _device: Dict[str, Tuple] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+    #: (engine, partition version, n_parts) -> (mesh, skey_sorted, svoff):
+    #: per-partition rank layouts stacked partition-major and sharded
+    #: across the mesh.
+    _sharded: Dict[Tuple, Tuple] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+    device_transfers: int = 0
+    # -- traversal counters (surfaced via traversal_stats) ------------------
+    dispatches: int = 0
+    hops_fused: int = 0
+    device_roundtrips: int = 0
+    last_frontier_sizes: "np.ndarray | None" = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    @property
+    def rows(self) -> int:
+        return len(self.host_vals)
+
+    def device(self, engine: str) -> Tuple:
+        plan = self._device.get(engine)
+        if plan is None:
+            plan = (jnp.asarray(self.key_sorted), jnp.asarray(self.voff))
+            self._device[engine] = plan
+            self.device_transfers += 1
+        return plan
+
+    def sharded_arrays(self, engine: str, parts) -> Tuple:
+        """Partition-major stacked ``(mesh, key_sorted, voff)``, sharded
+        ``P('part')`` -- each shard gets its partitions' rows in its own
+        rank layout (padding keys == ``n_key`` select nothing) and a
+        full-size segment index over the value space, so every shard
+        expands a partial plane the mesh then ``pmax``-combines."""
+        key = (engine, parts.version, parts.n_parts)
+        cached = self._sharded.get(key)
+        if cached is None:
+            import jax
+            from jax.sharding import Mesh, NamedSharding, PartitionSpec
+            devs = parts.mesh_devices(jax.devices())
+            mesh = Mesh(np.array(devs), ("part",))
+            ps = self.col.page_size
+            rmax = -(-parts.pmax * ps // 32) * 32
+            nseg = self.n_value + 1
+            skey = np.full(parts.n_parts * rmax, self.n_key, np.int32)
+            svoff = np.zeros(parts.n_parts * nseg, np.int32)
+            for k, p in enumerate(parts.parts):
+                lo, hi = p.row_lo, p.row_hi
+                order = np.argsort(self.host_vals[lo:hi], kind="stable")
+                skey[k * rmax: k * rmax + (hi - lo)] = \
+                    self.key_of_row[lo:hi][order]
+                svoff[k * nseg + 1: (k + 1) * nseg] = np.cumsum(
+                    np.bincount(self.host_vals[lo:hi],
+                                minlength=self.n_value))
+            spec = NamedSharding(mesh, PartitionSpec("part"))
+            cached = (mesh, jax.device_put(skey, spec),
+                      jax.device_put(svoff, spec))
+            self._sharded[key] = cached
+            self.device_transfers += 1
+        return cached
+
+    def stats(self) -> Dict[str, object]:
+        return {"rows": self.rows, "transfers": self.device_transfers,
+                "dispatches": self.dispatches,
+                "hops_fused": self.hops_fused,
+                "device_roundtrips": self.device_roundtrips}
+
+
+def traversal_plan(adj, engine: str) -> TraversalPlan:
+    """The adjacency's plan, built once per (column version,
+    partitioning) -- a repartition or version bump rebuilds; the build's
+    whole-column decode goes through the resident (and, when
+    partitioned, sharded) decode paths, so it *is* a partition-plane
+    dispatch."""
+    col = _kernel_column(adj)
+    key = (col.version, getattr(col, "partitions", 0) or 0)
+    plans = getattr(adj, "_traversal_plans", None)
+    if plans is None:
+        plans = {}
+        adj._traversal_plans = plans
+    plan = plans.get(key)
+    if plan is None:
+        n_pages = len(col.pages)
+        mat = pac_ops._decode_page_matrix(col, list(range(n_pages)), engine)
+        counts = np.asarray([p.count for p in col.pages], np.int64)
+        mask = np.arange(col.page_size)[None, :] < counts[:, None]
+        host_vals = mat[mask]
+        off = np.asarray(adj.offsets["<offset>"].values, np.int64)
+        key_of_row = np.repeat(
+            np.arange(adj.num_key_vertices, dtype=np.int32), np.diff(off))
+        if len(key_of_row) != len(host_vals):
+            raise ValueError("offset index disagrees with value column "
+                             f"({len(key_of_row)} vs {len(host_vals)} rows)")
+        n_key = int(adj.num_key_vertices)
+        n_value = int(adj.num_value_vertices)
+        # the rank-expansion layout: rows grouped by value id, padded to
+        # a word multiple with keys that select nothing
+        order = np.argsort(host_vals, kind="stable")
+        key_sorted = np.full(-(-len(host_vals) // 32) * 32, n_key,
+                             np.int32)
+        key_sorted[:len(host_vals)] = key_of_row[order]
+        voff = np.zeros(n_value + 1, np.int32)
+        voff[1:] = np.cumsum(np.bincount(host_vals, minlength=n_value))
+        plan = TraversalPlan(col, n_key, n_value, host_vals, key_of_row,
+                             key_sorted, voff)
+        plans[key] = plan
+    return plan
+
+
+def traversal_stats(adj) -> "Dict[str, object] | None":
+    """Aggregated traversal counters across the adjacency's live plans
+    (for ``GraphRetriever.stats()`` / ``ServeEngine.stats()``)."""
+    plans = getattr(adj, "_traversal_plans", None)
+    if not plans:
+        return None
+    out = {"dispatches": sum(p.dispatches for p in plans.values()),
+           "hops_fused": sum(p.hops_fused for p in plans.values()),
+           "device_transfers": sum(p.device_transfers
+                                   for p in plans.values()),
+           "traversal_device_roundtrips": sum(p.device_roundtrips
+                                              for p in plans.values())}
+    last = [p.last_frontier_sizes for p in plans.values()
+            if p.last_frontier_sizes is not None]
+    if last:
+        out["frontier_sizes"] = [int(x) for x in last[-1]]
+    return out
+
+
+def _filter_words(filts: Sequence, hops: int, n_words: int, n: int,
+                  engine: str) -> np.ndarray:
+    """Per-hop predicate bitmap words (all-ones rows where unfiltered)."""
+    fw = np.empty((hops, n_words), np.uint32)
+    for h in range(hops):
+        f = filts[h]
+        if f is None:
+            fw[h] = np.uint32(0xFFFFFFFF)
+        else:
+            if f.vt.num_vertices != n:
+                raise ValueError(
+                    f"hop-{h} filter covers {f.vt.num_vertices} vertices "
+                    f"but the traversal id space has {n}")
+            fw[h] = f.bitmap(engine)
+    return fw
+
+
+def _seed_vector(seeds: np.ndarray, sentinel: int) -> np.ndarray:
+    s_pad = size_class(len(seeds), SEED_CLASS_MIN)
+    out = np.full(s_pad, sentinel, np.int32)
+    out[:len(seeds)] = seeds
+    return out
+
+
+def _charge_ranges(col: DeltaColumn, plan: TraversalPlan,
+                   los, his, meter, cache, parts) -> None:
+    """Replay the page I/O of decoding ``[los, his)`` exactly as the
+    host oracle incurs it: LRU split, miss-page charge (bytes once,
+    requests per contiguous run), cache backfill from the plan's host
+    decode."""
+    ps = col.page_size
+    pages, _ = pac_ops.page_set_for_ranges(los, his, ps)
+    if not len(pages):
+        return
+    owner = parts.part_of_pages(pages) if parts is not None else None
+    if cache is None:
+        pac_ops._charge_pages(col, pages, meter)
+        return
+    _, miss = cache.split(pages, owner=owner)
+    pac_ops._charge_pages(col, miss, meter)
+    pos = {int(p): i for i, p in enumerate(pages)}
+    for p in miss:
+        rows = plan.host_vals[p * ps: p * ps + col.pages[p].count]
+        cache.put(p, rows.copy(),
+                  part=None if owner is None else int(owner[pos[p]]))
+
+
+def _charge_expansion(adj, col: DeltaColumn, plan: TraversalPlan,
+                      ids: np.ndarray, meter, cache, parts) -> None:
+    """One hop's oracle I/O: offsets gather + value-page charges."""
+    los, his = adj.edge_ranges_batch(ids, meter)
+    _charge_ranges(col, plan, los, his, meter, cache, parts)
+
+
+def _shard_width(parts) -> int:
+    """Mesh width for a traversal dispatch: the partition plane's mesh,
+    taken only when every device's share of the column clears the
+    adaptive SPMD threshold (same policy knob as the retrieval plane --
+    ``pac_ops.SHARD_MIN_PAGES``, read at call time so forced-SPMD test
+    environments see it)."""
+    g = parts.mesh_size(pac_ops._n_devices())
+    if g <= 1:
+        return 1
+    per_dev_pages = -(-len(parts.col.pages) // g)
+    if per_dev_pages < pac_ops.SHARD_MIN_PAGES:
+        return 1
+    return g
+
+
+def k_hop_fused(adj, seeds, hops: int, filts: Sequence, meter=None,
+                engine: str = "jax",
+                include_seeds: bool = True) -> np.ndarray:
+    """Fused k-hop: one scan-stepped dispatch, ids bit-identical to the
+    host oracle (``core.neighbor.k_hop`` with ``fused=False``)."""
+    col = _kernel_column(adj)
+    plan = traversal_plan(adj, engine)
+    n = plan.n_value
+    seeds = np.unique(np.asarray(seeds, np.int64))
+    if seeds.size == 0 or hops <= 0:
+        return seeds if include_seeds else np.zeros(0, np.int64)
+    n_words = -(-n // 32)
+    seed_ids = _seed_vector(seeds, n)
+    fw = _filter_words(filts, hops, n_words, n, engine)
+    parts = live_partitions(col)
+    g = _shard_width(parts) if parts is not None else 1
+    if parts is not None:
+        # the traversal runs over the partition plane's stacked rows
+        # (sharded across the mesh when wide enough) -- count it
+        parts.dispatches += 1
+    if g > 1:
+        from repro.kernels.shard import sharded_khop_entry
+        mesh, skey, svoff = plan.sharded_arrays(engine, parts)
+        fn = sharded_khop_entry(mesh, engine, n)
+        vis, planes, sizes = fn(skey, svoff, jnp.asarray(seed_ids),
+                                jnp.asarray(fw))
+        vis, planes, sizes = vis[0], planes[0], sizes[0]
+    else:
+        jkey, jvoff = plan.device(engine)
+        fn = K.khop_scan_pallas if engine == "pallas" else R.khop_scan_ref
+        vis, planes, sizes = fn(jkey, jvoff, jnp.asarray(seed_ids),
+                                jnp.asarray(fw), n_out=n)
+    plan.dispatches += 1
+    plan.hops_fused += int(hops)
+    plan.device_roundtrips += 1  # the one fused dispatch
+    plan.last_frontier_sizes = np.asarray(sizes, np.int64)
+    cache = live_cache(col)
+    if meter is not None or cache is not None:
+        # oracle-accounting replay: per-hop frontiers come back once
+        planes_host = None
+        ids = seeds
+        for h in range(hops):
+            if ids.size == 0:
+                break
+            if filts[h] is not None:
+                filts[h].charge(meter)
+            _charge_expansion(adj, col, plan, ids, meter, cache, parts)
+            if h + 1 < hops:
+                if planes_host is None:
+                    planes_host = np.asarray(planes)
+                    plan.device_roundtrips += 1
+                ids = np.flatnonzero(planes_host[h]).astype(np.int64)
+    visited = Frontier.from_dense_plane(np.asarray(vis), n)
+    if not include_seeds:
+        visited.andnot(Frontier.from_ids(seeds, n))
+    return visited.to_ids()
+
+
+def two_hop_pac(adj_a, adj_b, seeds, target_page_size: int, filt=None,
+                meter=None, engine: str = "jax") -> PAC:
+    """IC-8's heterogeneous two-hop chain as one fused dispatch.
+
+    Seeds (adjacency A's key space) expand through A into a mid plane
+    (A's value space == B's key space), the mid plane expands through B,
+    and the predicate bitmap ANDs the result in place; the host receives
+    packed bitmap words and builds the merged PAC directly.  Accounting
+    replays the staged host path (hop-1 decode, filter charge, hop-2
+    batched retrieval) when a meter or LRU is attached.
+    """
+    col_a, col_b = _kernel_column(adj_a), _kernel_column(adj_b)
+    plan_a = traversal_plan(adj_a, engine)
+    plan_b = traversal_plan(adj_b, engine)
+    if plan_a.n_value != plan_b.n_key:
+        raise ValueError("adjacencies do not chain: A's value space "
+                         f"({plan_a.n_value}) != B's key space "
+                         f"({plan_b.n_key})")
+    n_out = plan_b.n_value
+    n_words = -(-n_out // 32)
+    seeds = np.unique(np.asarray(seeds, np.int64))
+    if seeds.size == 0:
+        return PAC(target_page_size)
+    seed_ids = _seed_vector(seeds, plan_a.n_key)
+    if filt is not None:
+        if filt.vt.num_vertices != n_out:
+            raise ValueError("filter id space mismatch")
+        fwords = filt.bitmap(engine)
+    else:
+        fwords = np.full(n_words, np.uint32(0xFFFFFFFF), np.uint32)
+    fn = K.two_hop_pallas if engine == "pallas" else R.two_hop_ref
+    mid, words = fn(*plan_a.device(engine), *plan_b.device(engine),
+                    jnp.asarray(seed_ids), jnp.asarray(fwords),
+                    n_key=plan_a.n_key, n_mid=plan_a.n_value,
+                    n_out=n_out, n_words=n_words)
+    for plan in (plan_a, plan_b):
+        plan.dispatches += 1
+        plan.hops_fused += 1
+        plan.device_roundtrips += 1
+    cache_a, cache_b = live_cache(col_a), live_cache(col_b)
+    if meter is not None or cache_a is not None or cache_b is not None:
+        _charge_expansion(adj_a, col_a, plan_a, seeds, meter, cache_a,
+                          live_partitions(col_a))
+        if filt is not None:
+            filt.charge(meter)
+        created = np.flatnonzero(np.asarray(mid)).astype(np.int64)
+        if created.size:
+            _charge_expansion(adj_b, col_b, plan_b, created, meter,
+                              cache_b, live_partitions(col_b))
+    return PAC.from_dense_bitmap(np.asarray(words), target_page_size)
+
+
+def frontier_edge_counts(adj, starts, ends, los, his, meter=None,
+                         engine: str = "jax") -> np.ndarray:
+    """BI-2's counting expansion: an interval frontier over the key
+    space -> per-target **edge counts** (multiplicity preserved -- the
+    scatter adds instead of ORing), one fused dispatch.  ``los``/``his``
+    are the intervals' already-gathered edge-row ranges, used only to
+    replay the oracle's page charges."""
+    col = _kernel_column(adj)
+    plan = traversal_plan(adj, engine)
+    starts = np.asarray(starts, np.int64)
+    ends = np.asarray(ends, np.int64)
+    i_pad = size_class(len(starts), INTERVAL_CLASS_MIN)
+    sentinel = plan.n_key + 1
+    s = np.full(i_pad, sentinel, np.int32)
+    e = np.full(i_pad, sentinel, np.int32)
+    s[:len(starts)] = starts
+    e[:len(ends)] = ends
+    fn = K.count_hop_pallas if engine == "pallas" else R.count_hop_ref
+    counts = fn(*plan.device(engine), jnp.asarray(s), jnp.asarray(e),
+                n_key=plan.n_key, n_out=plan.n_value)
+    plan.dispatches += 1
+    plan.hops_fused += 1
+    plan.device_roundtrips += 1
+    cache = live_cache(col)
+    if meter is not None or cache is not None:
+        _charge_ranges(col, plan, los, his, meter, cache,
+                       live_partitions(col))
+    return np.asarray(counts, np.int64)

@@ -56,13 +56,21 @@ class GraphRetriever:
                  meter=None, engine: str = "numpy",
                  page_cache_pages: Optional[int] = 256,
                  filter_vt=None, filter_cond: Optional[Cond] = None,
-                 partitions: Optional[int] = None):
+                 partitions: Optional[int] = None,
+                 hops: int = 1):
         self.adj = adj
         self.tokens_col = tokens_col
         self.max_neighbors = max_neighbors
         self.tokens_per_neighbor = tokens_per_neighbor
         self.meter = meter
         self.engine = engine
+        # deep context (PR 6): with hops > 1 each tick additionally runs
+        # ONE k-hop traversal over the whole admitted batch -- fused on
+        # kernel engines (kernels/traversal), the shared frontier plane
+        # staying on device between hops -- and requests with spare
+        # neighbor slots draw from that shared deep pool
+        self.hops = int(hops)
+        self.deep_pool_last = 0  # deep-context pool size of the last tick
         self.calls = 0          # batched retrievals issued (one per tick)
         self.vertices_seen = 0  # requests served across all calls
         if filter_cond is not None and filter_vt is None:
@@ -123,6 +131,24 @@ class GraphRetriever:
             seg = np.repeat(np.arange(lengths.size), lengths)
             nbrs = nbrs[keep]
             lengths = np.bincount(seg[keep], minlength=lengths.size)
+        if self.hops > 1:
+            # one fused k-hop over the whole tick's seeds; the per-hop
+            # label predicate keeps the pool inside the filtered scope
+            from repro.core.neighbor import k_hop
+            pool = k_hop(self.adj, vs, self.hops, self.meter, self.engine,
+                         include_seeds=False, filter=self.label_filter)
+            self.deep_pool_last = int(pool.size)
+            if pool.size:
+                seg = np.repeat(np.arange(lengths.size), lengths)
+                per = [nbrs[seg == i] for i in range(lengths.size)]
+                for i, own in enumerate(per):
+                    need = self.max_neighbors - own.size
+                    if need > 0:
+                        per[i] = np.concatenate(
+                            [own, pool[~np.isin(pool, own)][:need]])
+                lengths = np.asarray([p.size for p in per], np.int64)
+                nbrs = np.concatenate(per) if per \
+                    else np.zeros(0, np.int64)
         if nbrs.size:
             # fetch each unique neighbor's tokens once for the whole tick
             uniq, inv = np.unique(nbrs, return_inverse=True)
@@ -165,4 +191,13 @@ class GraphRetriever:
             s["filter"] = {"cond": repr(self.label_filter.cond),
                            "considered": self.filter_considered,
                            "kept": self.filter_kept}
+        from repro.kernels.traversal.ops import traversal_stats
+        trav = traversal_stats(self.adj)
+        if trav is not None:
+            # traversal plane: fused dispatches, hops folded into them,
+            # host round-trips, and the last dispatch's per-hop frontier
+            # sizes
+            trav["hops"] = self.hops
+            trav["deep_pool_last"] = self.deep_pool_last
+            s["traversal"] = trav
         return s

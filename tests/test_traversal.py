@@ -1,0 +1,326 @@
+"""Fused on-device multi-hop traversal (the frontier plane).
+
+The invariant under test everywhere: the fused k-hop -- all k hops one
+``lax.scan``-stepped dispatch over the device-resident frontier plane --
+returns **bit-identical ids and IOMeter accounting** to the host-loop
+oracle (``k_hop`` with ``fused=False``) across engines, partition
+counts, hop counts, and per-hop label predicates.  On top of that:
+steady-state traversals must never retrace, the meterless/cacheless
+fused path must make exactly one device round-trip per traversal (no
+host-side id materialization between hops), and the partition plane must
+see fused traversals as dispatches.
+
+Runs on any device count: under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the multi-device
+CI job) the SPMD traversal tail executes across a real mesh; on one
+device the degenerate single-shard tail covers the same interfaces.
+"""
+import numpy as np
+import pytest
+
+from _engines import engines
+from _hypothesis_shim import given, settings, st
+from repro.core import (BY_SRC, ENC_GRAPHAR, Frontier, IOMeter, L,
+                        LabelFilter, attach_page_cache, build_adjacency,
+                        k_hop, live_partitions, partition_column)
+from repro.core.schema import VertexTypeSchema
+from repro.core.vertex import VertexTable
+from repro.data.synthetic import clustered_labels, powerlaw_graph
+from repro.kernels import _pad
+from repro.kernels.pac_decode import ops as pdo
+from repro.kernels.traversal import ops as trav
+
+N = 2000
+PAGE = 256
+PART_COUNTS = (1, 2, 8)
+HOPS = (1, 2, 3)
+
+
+def _edges():
+    return powerlaw_graph(N, 6, seed=13)
+
+
+def _adj():
+    src, dst = _edges()
+    return build_adjacency(src, dst, N, N, BY_SRC, ENC_GRAPHAR,
+                           page_size=PAGE)
+
+
+@pytest.fixture(scope="module")
+def vt():
+    labels = clustered_labels(N, ["A", "B"], density=0.3, run_scale=64,
+                              seed=7)
+    return VertexTable.build(VertexTypeSchema("v", [], labels=["A", "B"]),
+                             {}, labels, num_vertices=N)
+
+
+@pytest.fixture
+def forced_spmd(monkeypatch):
+    """Force the shard_map traversal tail regardless of column width."""
+    monkeypatch.setattr(pdo, "SHARD_MIN_PAGES", 0)
+
+
+def _meters_equal(a: IOMeter, b: IOMeter) -> bool:
+    return a.nbytes == b.nbytes and a.nrequests == b.nrequests
+
+
+def _brute_khop(src, dst, seeds, hops):
+    """Set-based BFS ground truth (independent of every plane)."""
+    seen = set(int(s) for s in seeds)
+    frontier = set(seen)
+    out = {v: set() for v in range(N)}
+    for s, d in zip(src, dst):
+        out[int(s)].add(int(d))
+    for _ in range(hops):
+        nxt = set()
+        for v in frontier:
+            nxt |= out[v]
+        frontier = nxt - seen
+        seen |= frontier
+    return np.array(sorted(seen), np.int64)
+
+
+# ------------------------------ correctness -------------------------------
+
+def test_oracle_matches_brute_force():
+    src, dst = _edges()
+    adj = _adj()
+    seeds = np.array([3, 17, 999])
+    for hops in HOPS:
+        np.testing.assert_array_equal(k_hop(adj, seeds, hops),
+                                      _brute_khop(src, dst, seeds, hops))
+
+
+@pytest.mark.parametrize("engine", engines(kernel_only=True))
+@pytest.mark.parametrize("parts", PART_COUNTS)
+@pytest.mark.parametrize("hops", HOPS)
+def test_fused_bit_identical_to_oracle(vt, engine, parts, hops):
+    """ids AND meters match across engines x partitions x hops, with a
+    random per-hop predicate pattern."""
+    adj_o, adj_f = _adj(), _adj()
+    rng = np.random.default_rng(parts * 10 + hops)
+    choices = (None, LabelFilter(vt, L("A")), LabelFilter(vt, L("B")))
+    filts = [choices[rng.integers(len(choices))] for _ in range(hops)]
+    seeds = rng.integers(0, N, size=5)
+    m_o, m_f = IOMeter(), IOMeter()
+    want = k_hop(adj_o, seeds, hops, m_o, filter=filts, partitions=parts,
+                 fused=False)
+    got = k_hop(adj_f, seeds, hops, m_f, engine=engine, filter=filts,
+                partitions=parts)
+    np.testing.assert_array_equal(got, want)
+    assert _meters_equal(m_o, m_f)
+
+
+@pytest.mark.parametrize("engine", engines(kernel_only=True))
+def test_fused_sharded_matches_oracle(vt, engine, forced_spmd):
+    """SPMD tail (real mesh under the forced-8-device job)."""
+    adj_o, adj_f = _adj(), _adj()
+    seeds = np.array([3, 17, 999, 1500])
+    filt = LabelFilter(vt, L("A"))
+    m_o, m_f = IOMeter(), IOMeter()
+    want = k_hop(adj_o, seeds, 3, m_o, filter=filt, partitions=2,
+                 fused=False)
+    got = k_hop(adj_f, seeds, 3, m_f, engine=engine, filter=filt,
+                partitions=2)
+    np.testing.assert_array_equal(got, want)
+    assert _meters_equal(m_o, m_f)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seeds=st.lists(st.integers(0, N - 1), min_size=0, max_size=12),
+       hops=st.integers(1, 3),
+       pattern=st.lists(st.sampled_from(["none", "A", "B"]),
+                        min_size=3, max_size=3))
+def test_fused_property_matches_oracle(vt, seeds, hops, pattern):
+    adj_o, adj_f = _adj(), _adj()
+    lut = {"none": None, "A": LabelFilter(vt, L("A")),
+           "B": LabelFilter(vt, L("B"))}
+    filts = [lut[p] for p in pattern[:hops]]
+    seeds = np.asarray(seeds, np.int64)
+    m_o, m_f = IOMeter(), IOMeter()
+    want = k_hop(adj_o, seeds, hops, m_o, filter=filts, fused=False)
+    got = k_hop(adj_f, seeds, hops, m_f, engine="jax", filter=filts)
+    np.testing.assert_array_equal(got, want)
+    assert _meters_equal(m_o, m_f)
+
+
+@pytest.mark.parametrize("engine", engines())
+def test_empty_frontier_early_exit(engine):
+    adj = _adj()
+    m = IOMeter()
+    out = k_hop(adj, np.zeros(0, np.int64), 3, m, engine=engine)
+    assert out.size == 0
+    assert m.nbytes == 0 and m.nrequests == 0  # nothing charged
+
+
+@pytest.mark.parametrize("engine", engines())
+def test_seeds_with_no_edges(engine):
+    # vertex 4 is isolated: the frontier dies after hop 1's empty expand
+    src = np.array([0, 1, 2])
+    dst = np.array([1, 2, 3])
+    adj = build_adjacency(src, dst, 5, 5, BY_SRC, ENC_GRAPHAR,
+                          page_size=32)
+    m_o, m_f = IOMeter(), IOMeter()
+    want = k_hop(adj, np.array([4]), 3, m_o, fused=False)
+    got = k_hop(adj, np.array([4]), 3, m_f, engine=engine)
+    np.testing.assert_array_equal(want, [4])
+    np.testing.assert_array_equal(got, [4])
+    assert _meters_equal(m_o, m_f)
+    assert k_hop(adj, np.array([4]), 3, engine=engine,
+                 include_seeds=False).size == 0
+
+
+@pytest.mark.parametrize("engine", engines())
+def test_include_seeds_flag(engine):
+    adj = _adj()
+    seeds = np.array([3, 17, 999])
+    full = k_hop(adj, seeds, 2, engine=engine)
+    bare = k_hop(adj, seeds, 2, engine=engine, include_seeds=False)
+    np.testing.assert_array_equal(
+        bare, np.setdiff1d(full, seeds, assume_unique=True))
+
+
+def test_fused_on_numpy_engine_raises():
+    with pytest.raises(ValueError):
+        k_hop(_adj(), np.array([0]), 2, engine="numpy", fused=True)
+
+
+@pytest.mark.parametrize("engine", engines(kernel_only=True))
+def test_fused_with_page_cache_matches_oracle(engine):
+    """Warm-cache evolution (miss-only charging) matches hop for hop."""
+    adj_o, adj_f = _adj(), _adj()
+    attach_page_cache(adj_o.table["<dst>"], 64)
+    attach_page_cache(adj_f.table["<dst>"], 64)
+    rng = np.random.default_rng(3)
+    for trial in range(3):                      # cold, then warm runs
+        seeds = rng.integers(0, N, size=4)
+        m_o, m_f = IOMeter(), IOMeter()
+        want = k_hop(adj_o, seeds, 2, m_o, fused=False)
+        got = k_hop(adj_f, seeds, 2, m_f, engine=engine)
+        np.testing.assert_array_equal(got, want)
+        assert _meters_equal(m_o, m_f)
+
+
+# --------------------------- dispatch-cost plane ---------------------------
+
+@pytest.mark.parametrize("engine", engines(kernel_only=True))
+def test_steady_state_traversals_do_not_retrace(engine):
+    adj = _adj()
+    rng = np.random.default_rng(37)
+    batches = [rng.integers(0, N, s) for s in rng.integers(2, 40, size=10)]
+    for vs in batches:                          # warm the one size class
+        k_hop(adj, vs, 2, engine=engine)
+    before = _pad.trace_count()
+    for _ in range(10):
+        for vs in batches:                      # 100 steady-state runs
+            k_hop(adj, vs, 2, engine=engine)
+    assert _pad.trace_count() == before
+
+
+@pytest.mark.parametrize("engine", engines(kernel_only=True))
+def test_meterless_fused_single_roundtrip(engine):
+    """With no meter and no LRU attached, nothing but the visited plane
+    crosses back: one device round-trip per traversal, k hops fused."""
+    adj = _adj()
+    k_hop(adj, np.array([3]), 3, engine=engine)     # build plan
+    plan = trav.traversal_plan(adj, engine)
+    d0, r0, h0 = plan.dispatches, plan.device_roundtrips, plan.hops_fused
+    k_hop(adj, np.array([17, 999]), 3, engine=engine)
+    assert plan.dispatches == d0 + 1
+    assert plan.device_roundtrips == r0 + 1         # no per-hop trips
+    assert plan.hops_fused == h0 + 3
+    assert plan.last_frontier_sizes is not None
+    assert len(plan.last_frontier_sizes) == 3
+
+
+@pytest.mark.parametrize("engine", engines(kernel_only=True))
+def test_fused_counts_partition_dispatch(engine):
+    adj = _adj()
+    partition_column(adj.table["<dst>"].encoded, 2)
+    parts = live_partitions(adj.table["<dst>"].encoded)
+    before = parts.dispatches
+    k_hop(adj, np.array([3, 17]), 2, engine=engine)
+    assert parts.dispatches > before
+
+
+def test_traversal_stats_aggregate():
+    adj = _adj()
+    assert trav.traversal_stats(adj) is None        # no plans yet
+    k_hop(adj, np.array([3]), 2, engine="jax")
+    s = trav.traversal_stats(adj)
+    assert s["dispatches"] >= 1 and s["hops_fused"] >= 2
+    assert s["traversal_device_roundtrips"] >= 1
+    assert len(s["frontier_sizes"]) == 2
+
+
+# ------------------------------ frontier type ------------------------------
+
+def test_frontier_roundtrip_and_setops():
+    f = Frontier.from_ids(np.array([1, 5, 64, 1999]), N)
+    np.testing.assert_array_equal(f.to_ids(), [1, 5, 64, 1999])
+    assert len(f) == 4 and 64 in f and 63 not in f
+    g = Frontier.from_ids(np.array([5, 7]), N)
+    u = f.copy()
+    u.or_(g)
+    np.testing.assert_array_equal(u.to_ids(), [1, 5, 7, 64, 1999])
+    u.andnot(g)
+    np.testing.assert_array_equal(u.to_ids(), [1, 64, 1999])
+    u.and_(Frontier.from_ids(np.array([64]), N))
+    np.testing.assert_array_equal(u.to_ids(), [64])
+    with pytest.raises(ValueError):
+        f.or_(Frontier.from_ids(np.array([0]), N + 1))
+
+
+def test_frontier_pac_and_device_mirror():
+    ids = np.array([0, 31, 32, 255, 256])
+    f = Frontier.from_ids(ids, 512)
+    pac = f.to_pac(64)
+    np.testing.assert_array_equal(pac.to_ids(), ids)
+    p1 = f.device_plane("jax")
+    assert f.device_plane("jax") is p1              # cached per engine
+    assert f.device_stats()["transfers"] == 1
+    np.testing.assert_array_equal(np.flatnonzero(np.asarray(p1)), ids)
+    f.set_ids(np.array([7]))
+    assert f.device_plane("jax") is not p1          # mutation invalidates
+
+
+# ------------------------------- serving tie -------------------------------
+
+def test_retriever_deep_context_pool():
+    from repro.serve.retrieval import GraphRetriever
+    from repro.core.table import TokensColumn
+    src = np.array([0, 1, 2, 3])
+    dst = np.array([1, 2, 3, 4])
+    adj = build_adjacency(src, dst, 6, 6, BY_SRC, ENC_GRAPHAR,
+                          page_size=32)
+    tokens = TokensColumn("tokens",
+                          [np.arange(4, dtype=np.int32) + 10 * i
+                           for i in range(6)], page_size=32)
+    deep = GraphRetriever(adj, tokens, max_neighbors=3,
+                          tokens_per_neighbor=4, engine="jax", hops=2)
+    ctx = deep(np.array([0]))
+    # 1-hop neighbor 1 first, then the hop-2 discovery (vertex 2) fills
+    # the spare slot from the shared pool
+    np.testing.assert_array_equal(ctx[0], np.concatenate(
+        [tokens.get(1)[:4], tokens.get(2)[:4]]))
+    s = deep.stats()
+    assert s["traversal"]["hops_fused"] >= 2
+    assert s["traversal"]["deep_pool_last"] == 2    # vertices 1 and 2
+
+
+def test_retriever_stats_surface_traversal_counters():
+    from repro.serve.retrieval import GraphRetriever
+    from repro.core.table import TokensColumn
+    src, dst = _edges()
+    adj = build_adjacency(src, dst, N, N, BY_SRC, ENC_GRAPHAR,
+                          page_size=PAGE)
+    tokens = TokensColumn("tokens",
+                          [np.arange(4, dtype=np.int32)] * N,
+                          page_size=PAGE)
+    r = GraphRetriever(adj, tokens, max_neighbors=4, engine="jax", hops=2)
+    r(np.array([3, 17]))
+    s = r.stats()
+    assert s["traversal"]["hops"] == 2
+    assert s["traversal"]["dispatches"] >= 1
+    assert s["traversal"]["traversal_device_roundtrips"] >= 1
+    assert len(s["traversal"]["frontier_sizes"]) == 2
