@@ -1,0 +1,132 @@
+"""Mutable graph plane (PR 7): serving cost under pending writes.
+
+Four sections:
+
+* ``ingest_append_*`` -- raw delta-segment ingest throughput (staged
+  sorted-merge + zone-map update, per batch);
+* ``ingest_read_*`` -- the acceptance rows: the batched neighbor read
+  with a row-group's worth of pending delta rows (union at dispatch
+  time) against the write-once baseline on the same base graph, cold
+  (no decoded-page LRU) and warm, per engine.  The delta path reads a
+  RAM-resident memtable, so the paired ratio must stay small (the PR
+  acceptance bound: never worse than 1.5x write-once);
+* ``ingest_compact_*`` -- one full merge -> swap compaction;
+* ``ingest_sustained_*`` -- an ingest+serve loop with the compactor on
+  (policy-gated ``maybe_compact`` folds the backlog and restores the
+  write-once path) vs off (the backlog only grows).
+
+Every timed read is preceded by a bit-identity assertion against a
+from-scratch rebuild -- pending writes must be invisible except in wall
+time.  ``REPRO_BENCH_SMOKE=1`` shrinks the graph so CI runs in seconds.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core import (BY_SRC, ENC_GRAPHAR, attach_page_cache,
+                        build_adjacency, neighbor_ids_batch)
+from repro.core.compaction import CompactionPolicy, CompactionRunner
+from repro.core.delta_segment import all_edges, attach_delta, live_delta
+
+from .bench_resident import _paired
+from .util import emit, timeit
+
+SMOKE = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+N = 2_000 if SMOKE else 20_000
+DEG = 8 if SMOKE else 16
+PAGE = 512 if SMOKE else 2048
+BATCH = 8 if SMOKE else 64
+INGEST_ROWS = 128 if SMOKE else 1024
+ENGINES = ("numpy", "jax")
+SUSTAINED_TICKS = 6 if SMOKE else 30
+
+
+def _base(seed=11):
+    from repro.data.synthetic import powerlaw_graph
+    src, dst = powerlaw_graph(N, DEG, locality=0.85, seed=seed)
+    return build_adjacency(src, dst, N, N, BY_SRC, ENC_GRAPHAR,
+                           page_size=PAGE)
+
+
+def _with_backlog(seed=11, rows=None):
+    """Base graph + one row-group's worth of pending delta rows."""
+    adj = _base(seed)
+    rows = PAGE if rows is None else rows
+    rng = np.random.default_rng(seed + 1)
+    attach_delta(adj).ingest(rng.integers(0, N, rows),
+                             rng.integers(0, N, rows))
+    return adj
+
+
+def _check_identity(adj, vs, engine):
+    oracle = build_adjacency(*all_edges(adj), N, N, BY_SRC, ENC_GRAPHAR,
+                             page_size=PAGE)
+    np.testing.assert_array_equal(
+        neighbor_ids_batch(adj, vs, engine=engine),
+        neighbor_ids_batch(oracle, vs, engine="numpy"))
+
+
+def run() -> None:
+    rng = np.random.default_rng(3)
+    vs = rng.integers(0, N, BATCH)
+
+    # -- raw ingest throughput --------------------------------------------
+    adj = _base()
+    delta = attach_delta(adj)
+    batches = [(rng.integers(0, N, INGEST_ROWS),
+                rng.integers(0, N, INGEST_ROWS)) for _ in range(8)]
+    it = iter(range(1 << 30))
+    us = timeit(lambda: delta.ingest(*batches[next(it) % len(batches)]),
+                repeats=8, warmup=1)
+    emit(f"ingest_append_rows{INGEST_ROWS}", us,
+         f"rows_per_s={INGEST_ROWS / (us / 1e6):.0f}")
+
+    # -- read under pending writes vs write-once (the acceptance rows) ----
+    for engine in ENGINES:
+        for cache, label in ((None, "cold"), (256, "warm")):
+            base = _base()
+            under = _with_backlog()
+            if cache:
+                attach_page_cache(base.table[base.value_col], cache)
+                attach_page_cache(under.table[under.value_col], cache)
+            _check_identity(under, vs, engine)
+            a, b, ratio = _paired(
+                lambda: neighbor_ids_batch(base, vs, engine=engine),
+                lambda: neighbor_ids_batch(under, vs, engine=engine))
+            emit(f"ingest_read_writeonce_{label}_{engine}_b{BATCH}", a, "")
+            emit(f"ingest_read_underwrite_{label}_{engine}_b{BATCH}", b,
+                 f"vs_writeonce={ratio:.2f}x")
+
+    # -- one compaction ----------------------------------------------------
+    us = timeit(lambda: CompactionRunner(_with_backlog()).compact(),
+                repeats=3, warmup=1)
+    emit(f"ingest_compact_rows{PAGE}", us, "merge+swap")
+
+    # -- sustained ingest+serve: compactor on vs off ----------------------
+    def sustained(compact_on: bool):
+        adj = _base()
+        attach_delta(adj)
+        runner = CompactionRunner(
+            adj, policy=CompactionPolicy(min_delta_rows=PAGE),
+            sleep=lambda _s: None)
+        r = np.random.default_rng(7)
+        for _ in range(SUSTAINED_TICKS):
+            adj.delta.ingest(r.integers(0, N, INGEST_ROWS),
+                             r.integers(0, N, INGEST_ROWS))
+            neighbor_ids_batch(adj, r.integers(0, N, BATCH),
+                               engine="numpy")
+            if compact_on:
+                runner.maybe_compact()
+        return adj
+
+    a, b, ratio = _paired(lambda: sustained(True),
+                          lambda: sustained(False), reps=4)
+    adj_on = sustained(True)
+    pending = (live_delta(adj_on).pending_rows()
+               if live_delta(adj_on) else 0)
+    emit(f"ingest_sustained_compact_on_t{SUSTAINED_TICKS}", a,
+         f"end_pending={pending}")
+    emit(f"ingest_sustained_compact_off_t{SUSTAINED_TICKS}", b,
+         f"off_over_on={ratio:.2f}x")

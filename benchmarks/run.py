@@ -12,11 +12,11 @@ import os
 import time
 
 from . import (bench_batch_scaling, bench_complex_filter, bench_e2e,
-               bench_kernels, bench_label_filter, bench_label_scaling,
-               bench_label_storage, bench_media, bench_neighbor,
-               bench_partition, bench_pipeline, bench_resident,
-               bench_simple_filter, bench_storage, bench_transform,
-               bench_traversal)
+               bench_ingest, bench_kernels, bench_label_filter,
+               bench_label_scaling, bench_label_storage, bench_media,
+               bench_neighbor, bench_partition, bench_pipeline,
+               bench_resident, bench_simple_filter, bench_storage,
+               bench_transform, bench_traversal)
 from .util import header, set_suite, write_json
 
 SUITES = {
@@ -33,6 +33,7 @@ SUITES = {
     "resident": bench_resident.run,
     "partition": bench_partition.run,
     "traversal": bench_traversal.run,
+    "ingest": bench_ingest.run,
     "table2_media": bench_media.run,
     "table3_e2e": bench_e2e.run,
     "pipeline": bench_pipeline.run,
@@ -46,13 +47,13 @@ def main() -> None:
                     help="comma-separated suite names")
     ap.add_argument("--json", default=None,
                     help="machine-readable results path ('' to skip); "
-                         "defaults to BENCH_PR6.json, or bench_smoke.json "
+                         "defaults to BENCH_PR7.json, or bench_smoke.json "
                          "under REPRO_BENCH_SMOKE so shrunk-workload rows "
                          "never overwrite the tracked trajectory")
     args = ap.parse_args()
     if args.json is None:
         args.json = ("bench_smoke.json" if os.environ.get("REPRO_BENCH_SMOKE")
-                     else "BENCH_PR6.json")
+                     else "BENCH_PR7.json")
     names = (args.only.split(",") if args.only else list(SUITES))
     header()
     t0 = time.perf_counter()

@@ -1,0 +1,33 @@
+"""When to compact: pending delta rows vs. the packed base.
+
+The memtable (delta segments) serves reads RAM-resident, so small
+backlogs are cheap; compaction pays one full re-encode to restore the
+write-once fast paths (fused traversal plans, device-resident zero
+retraces).  The policy triggers when the backlog reaches a row-group's
+worth of rows -- the natural flush unit -- or an outsized fraction of
+the base.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass
+class CompactionPolicy:
+    #: absolute pending-row trigger; None = one row group
+    #: (``DeltaSegments.row_group_rows``)
+    min_delta_rows: Optional[int] = None
+    #: relative trigger: pending >= fraction * base rows
+    max_delta_fraction: float = 0.5
+
+    def should_compact(self, pending_rows: int, base_rows: int,
+                       row_group_rows: int) -> bool:
+        if pending_rows <= 0:
+            return False
+        threshold = (self.min_delta_rows if self.min_delta_rows is not None
+                     else row_group_rows)
+        if pending_rows >= threshold:
+            return True
+        return base_rows > 0 and \
+            pending_rows >= self.max_delta_fraction * base_rows

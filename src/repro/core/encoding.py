@@ -322,6 +322,14 @@ class PackedPages:
     #: host->device transfers performed (one per engine populated).
     device_transfers: int = dataclasses.field(
         default=0, repr=False, compare=False)
+    #: a failed/corrupted device transfer marks the mirror poisoned; the
+    #: dispatch layers then route to the host oracle path (identical ids
+    #: and IOMeter) until a version bump rebuilds this object.
+    poisoned: bool = dataclasses.field(
+        default=False, repr=False, compare=False)
+    #: dispatches that fell back to the host path because of poisoning.
+    fallbacks: int = dataclasses.field(
+        default=0, repr=False, compare=False)
 
     @property
     def n_pages(self) -> int:
@@ -405,10 +413,18 @@ class PackedPages:
             self.device_transfers += 1
         return plan
 
+    def poison(self) -> None:
+        """Mark the device mirror unusable (simulated transfer fault /
+        corruption detection): consumers degrade to the host oracle; the
+        next version bump rebuilds a clean mirror."""
+        self.poisoned = True
+
     def device_stats(self) -> Dict[str, object]:
         return {"engines": sorted(set(self._device) | set(self._device_plans)),
                 "transfers": self.device_transfers,
-                "version": self.version}
+                "version": self.version,
+                "poisoned": self.poisoned,
+                "fallbacks": self.fallbacks}
 
     def slice(self, p0: int, p1: int) -> Tuple[np.ndarray, ...]:
         """Zero-copy views of pages [p0, p1)."""

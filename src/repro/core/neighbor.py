@@ -25,11 +25,28 @@ from __future__ import annotations
 
 import numpy as np
 
+from .delta_segment import live_delta
 from .edge import AdjacencyTable
 from .pac import PAC
 from .partition import ensure_default_partitions
 from .table import DeltaIntColumn
 from .vertex import VertexTable
+
+
+def _mirror_poisoned(adj: AdjacencyTable) -> bool:
+    """True when the column's device mirror is marked poisoned (a failed
+    or corrupted transfer): kernel paths fall back to the host oracle --
+    ids and IOMeter are engine-identical by construction, so degradation
+    is invisible to results.  A compaction (or any version bump) rebuilds
+    the mirror and heals the route."""
+    col = adj.table[adj.value_col]
+    if not isinstance(col, DeltaIntColumn):
+        return False
+    packed = col.encoded.packed_cache
+    if packed is not None and packed.poisoned:
+        packed.fallbacks += 1
+        return True
+    return False
 
 
 def _kernel_column(adj: AdjacencyTable):
@@ -52,6 +69,8 @@ def decode_edge_ranges(adj: AdjacencyTable, los, his, meter=None,
     This is the shared multi-range primitive under every batched consumer
     (IC-8 hop fan-out, BI-2 interval ranges, k-hop frontiers, serving).
     """
+    if engine != "numpy" and _mirror_poisoned(adj):
+        engine = "numpy"  # poisoned device mirror: host oracle decodes
     if engine == "numpy":
         return np.asarray(
             adj.table[adj.value_col].read_rows_concat(los, his, meter),
@@ -70,10 +89,27 @@ def neighbor_ids_batch(adj: AdjacencyTable, vs, meter=None,
     vertices in ``vs`` and empty adjacencies cost nothing extra.  With
     ``unique`` the result is the sorted union; otherwise the concatenation
     in ``vs`` order (multiplicity preserved).
+
+    Pending delta rows (the mutable plane) are unioned in at this level,
+    so every consumer -- the k-hop host loops included -- sees ingested
+    edges immediately; delta reads are RAM-resident and charge no lake
+    I/O.  The merged per-vertex lists equal a from-scratch rebuild's.
     """
     los, his = adj.edge_ranges_batch(vs, meter)
     ids = decode_edge_ranges(adj, los, his, meter, engine)
-    return np.unique(ids) if unique else ids
+    delta = live_delta(adj)
+    if delta is None:
+        return np.unique(ids) if unique else ids
+    if unique:
+        return np.union1d(ids, delta.unique_ids(vs))
+    dvals, dlens = delta.lookup_batch(vs)
+    lengths = np.maximum(his - los, 0)
+    # per-vertex sorted merge of (base rows, delta rows) -- exactly the
+    # per-vertex list the rebuilt dual-key layout would decode
+    seg = np.concatenate([np.repeat(np.arange(lengths.size), lengths),
+                          np.repeat(np.arange(dlens.size), dlens)])
+    allv = np.concatenate([ids, dvals])
+    return allv[np.lexsort((allv, seg))]
 
 
 def retrieve_neighbors_batch(adj: AdjacencyTable, vs,
@@ -114,20 +150,35 @@ def retrieve_neighbors_batch(adj: AdjacencyTable, vs,
     if filter is not None:
         filter.charge(meter)
     los, his = adj.edge_ranges_batch(vs, meter)
+    # mutable plane: the batch's pending neighbors, zone-map-pruned by
+    # the predicate's qualifying hull then exact-filtered host-side
+    # (exact, so base-side statistics pruning can never drop a delta id).
+    # RAM-resident -- no lake I/O charged.
+    delta = live_delta(adj)
+    delta_ids = None
+    if delta is not None:
+        qual = filter.qual_range() if filter is not None else None
+        delta_ids = delta.unique_ids(vs, qual)
+        if filter is not None and delta_ids.size:
+            delta_ids = delta_ids[filter.mask_ids(delta_ids, engine)]
+    if engine != "numpy" and _mirror_poisoned(adj):
+        engine = "numpy"  # graceful degradation: host oracle serves
     if engine == "numpy":
         ids = decode_edge_ranges(adj, los, his, meter, engine)
-        if ids.size == 0:
-            return PAC(target_page_size)
-        pac = PAC.from_ids(np.unique(ids), target_page_size)
+        pac = PAC.from_ids(np.unique(ids), target_page_size) \
+            if ids.size else PAC(target_page_size)
         if filter is not None:
             pac = pac.intersect(filter.pac(target_page_size))
+        if delta_ids is not None and delta_ids.size:
+            pac = pac.union(PAC.from_ids(delta_ids, target_page_size))
         return pac
     from repro.kernels.pac_decode import ops as pac_ops
     return pac_ops.retrieve_pac_batch(_kernel_column(adj), los, his,
                                       target_page_size, meter, engine=engine,
                                       num_targets=adj.num_value_vertices,
                                       fused=fused, label_filter=filter,
-                                      resident=resident)
+                                      resident=resident,
+                                      delta_ids=delta_ids)
 
 
 def retrieve_neighbors(adj: AdjacencyTable, v: int,
@@ -272,6 +323,14 @@ def k_hop(adj: AdjacencyTable, seeds: np.ndarray, hops: int,
                  and adj.num_key_vertices == adj.num_value_vertices
                  and (resident if resident is not None
                       else DEVICE_RESIDENT))
+    if fused and (live_delta(adj) is not None or _mirror_poisoned(adj)):
+        # graceful degradation, two flavors: the fused traversal plan is
+        # built over the packed base only, so while delta rows are
+        # pending the host loop serves (it unions the mutable plane per
+        # hop); a poisoned device mirror routes the same way.  Once
+        # compaction drains the plane and bumps the version, the fused
+        # plan rebuilds and zero-retrace steady state resumes.
+        fused = False
     if fused:
         from repro.kernels.traversal.ops import k_hop_fused
         return k_hop_fused(adj, seeds, hops, filts, meter, engine,

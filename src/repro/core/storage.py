@@ -20,10 +20,13 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import re
 import struct
 from typing import Dict, List, Optional
 
 import numpy as np
+
+from repro.ft import faults as ft_faults
 
 from .encoding import DeltaColumn, DeltaPage, RleColumn
 from .table import (BoolPlainColumn, BoolRleColumn, Column, DeltaIntColumn,
@@ -139,9 +142,32 @@ def _col_meta_and_bufs(col: Column, w: _Writer) -> dict:
     raise TypeError(f"unsupported column type {type(col)}")
 
 
-def write_table(table: Table, path: str) -> int:
-    """Serialize ``table`` to ``path`` (.gar). Returns file size in bytes."""
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+def _atomic_write_bytes(path: str, blob: bytes, faults=None) -> int:
+    """Durable write: temp file + ``os.replace`` (atomic on POSIX).
+
+    Readers never observe a torn file at ``path`` -- they see either the
+    old contents or the new ones.  A crash mid-write (exercised via the
+    ``store.write`` fault boundary, injected between the two halves of
+    the payload) leaves only a ``.tmp-*`` turd that garbage collection
+    removes; ``path`` itself is untouched.
+    """
+    tmp = f"{path}.tmp-{os.getpid()}"
+    half = len(blob) // 2
+    f = open(tmp, "wb")
+    try:
+        f.write(blob[:half])
+        ft_faults.check(faults, "store.write")
+        f.write(blob[half:])
+        f.flush()
+        os.fsync(f.fileno())
+    finally:
+        f.close()
+    os.replace(tmp, path)
+    return len(blob)
+
+
+def table_blob(table: Table) -> bytes:
+    """The full ``.gar`` container bytes of ``table`` (in memory)."""
     w = _Writer()
     cols_meta = {}
     for name, col in table.columns.items():
@@ -152,14 +178,19 @@ def write_table(table: Table, path: str) -> int:
         "name": table.name, "num_rows": table.num_rows,
         "page_size": table.page_size, "columns": cols_meta,
     }).encode("utf-8")
-    with open(path, "wb") as f:
-        f.write(MAGIC)
-        for b in w.bufs:
-            f.write(b)
-        f.write(footer)
-        f.write(struct.pack("<I", len(footer)))
-        f.write(MAGIC)
-    return os.path.getsize(path)
+    return b"".join([MAGIC, *w.bufs, footer,
+                     struct.pack("<I", len(footer)), MAGIC])
+
+
+def write_table(table: Table, path: str, faults=None) -> int:
+    """Serialize ``table`` to ``path`` (.gar), atomically.
+
+    Returns file size in bytes.  The container is staged as a sibling
+    temp file and renamed into place, so a crash mid-write never
+    corrupts an existing table.
+    """
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    return _atomic_write_bytes(path, table_blob(table), faults)
 
 
 def _read_ref(data: bytes, ref: dict, dtype=None) -> np.ndarray:
@@ -223,19 +254,77 @@ def read_table(path: str) -> Table:
 # dataset-level store: a directory of .gar files + graph.yaml
 # --------------------------------------------------------------------------
 
-class GraphStore:
-    """Directory layout: ``<root>/graph.yaml`` + ``<root>/<table>.gar``."""
+MANIFEST = "manifest.json"
+_GEN_RE = re.compile(r"\.g\d+\.gar$")
 
-    def __init__(self, root: str):
+
+class GraphStore:
+    """Directory layout: ``<root>/graph.yaml`` + ``<root>/<table>.gar``.
+
+    Crash consistency (mutable plane): every file lands via temp +
+    ``os.replace``, and multi-file updates (compaction writing a new
+    generation of edge tables) commit through **one** atomic manifest
+    flip -- ``manifest.json`` maps each logical table name to the
+    physical generation file (``<name>.g<gen>.gar``) that serves it.
+    Readers follow the manifest when present and fall back to the legacy
+    ``<name>.gar`` layout otherwise, so write-once stores keep working
+    unchanged.  Files orphaned by a crash (staged generations that never
+    got committed, ``.tmp-*`` turds) are removed by
+    :func:`repro.core.compaction.gc.collect_garbage`.
+    """
+
+    def __init__(self, root: str, faults=None):
         self.root = root
+        #: optional :class:`repro.ft.faults.FaultPlan` threaded into
+        #: every write this store issues
+        self.faults = faults
 
     def table_path(self, name: str) -> str:
         return os.path.join(self.root, f"{name}.gar")
 
+    # -- manifest (the atomic commit point) --------------------------------
+    def manifest_path(self) -> str:
+        return os.path.join(self.root, MANIFEST)
+
+    def manifest(self) -> Optional[dict]:
+        """The committed manifest, or None for a legacy/fresh store."""
+        try:
+            with open(self.manifest_path(), "r", encoding="utf-8") as f:
+                return json.load(f)
+        except FileNotFoundError:
+            return None
+
+    def current_generation(self) -> int:
+        m = self.manifest()
+        return 0 if m is None else int(m.get("generation", 0))
+
+    def commit_manifest(self, tables: Dict[str, str],
+                        generation: int) -> None:
+        """Atomically flip the manifest pointer -- the single commit
+        point of a multi-file update.  ``tables`` maps logical table
+        names to physical filenames inside the store root."""
+        blob = json.dumps({"generation": int(generation),
+                           "tables": dict(tables)},
+                          sort_keys=True).encode("utf-8")
+        os.makedirs(self.root, exist_ok=True)
+        _atomic_write_bytes(self.manifest_path(), blob, self.faults)
+
     def write(self, table: Table) -> int:
-        return write_table(table, self.table_path(table.name))
+        return write_table(table, self.table_path(table.name),
+                           self.faults)
+
+    def write_generation(self, table: Table, generation: int) -> str:
+        """Stage one generation file (``<name>.g<gen>.gar``); invisible
+        to readers until :meth:`commit_manifest` references it."""
+        fname = f"{table.name}.g{int(generation)}.gar"
+        write_table(table, os.path.join(self.root, fname), self.faults)
+        return fname
 
     def read(self, name: str) -> Table:
+        m = self.manifest()
+        if m is not None and name in m.get("tables", {}):
+            return read_table(os.path.join(self.root,
+                                           m["tables"][name]))
         return read_table(self.table_path(name))
 
     def write_schema_yaml(self, schema) -> None:
@@ -248,5 +337,11 @@ class GraphStore:
     def list_tables(self) -> List[str]:
         if not os.path.isdir(self.root):
             return []
-        return sorted(f[:-4] for f in os.listdir(self.root)
-                      if f.endswith(".gar"))
+        m = self.manifest()
+        names = set() if m is None else set(m.get("tables", {}))
+        for f in os.listdir(self.root):
+            # legacy write-once files; generation files only count via
+            # the manifest (an uncommitted one is invisible garbage)
+            if f.endswith(".gar") and not _GEN_RE.search(f):
+                names.add(f[:-4])
+        return sorted(names)

@@ -16,6 +16,12 @@ heartbeats per step; the coordinator:
 The same class drives the test harness (tests/test_ft.py) and the trainer
 loop's failure hooks -- the trainer calls ``tick`` each step and obeys the
 actions returned.
+
+Liveness and strike bookkeeping live in :mod:`repro.ft.backoff`
+(:class:`~repro.ft.backoff.HeartbeatTracker`,
+:class:`~repro.ft.backoff.StrikeCounter`) -- shared with the mutable
+graph plane's compaction runner, which retries via the same module's
+:class:`~repro.ft.backoff.Backoff`.
 """
 from __future__ import annotations
 
@@ -23,6 +29,8 @@ import dataclasses
 import enum
 import time
 from typing import Dict, List, Optional
+
+from .backoff import HeartbeatTracker, StrikeCounter
 
 
 class WorkerState(enum.Enum):
@@ -43,10 +51,14 @@ class Action(enum.Enum):
 class Worker:
     worker_id: int
     state: WorkerState = WorkerState.HEALTHY
-    last_heartbeat: float = 0.0
     last_step: int = -1
     step_latencies: List[float] = dataclasses.field(default_factory=list)
-    slow_strikes: int = 0
+    strikes: StrikeCounter = dataclasses.field(
+        default_factory=lambda: StrikeCounter(3))
+
+    @property
+    def slow_strikes(self) -> int:
+        return self.strikes.strikes
 
 
 @dataclasses.dataclass
@@ -62,15 +74,17 @@ class Coordinator:
     def __init__(self, num_workers: int, heartbeat_timeout: float = 30.0,
                  straggler_factor: float = 2.0, strike_limit: int = 3,
                  spares: int = 1, clock=time.monotonic):
-        self.workers = {i: Worker(i) for i in range(num_workers)}
         self.heartbeat_timeout = heartbeat_timeout
         self.straggler_factor = straggler_factor
         self.strike_limit = strike_limit
         self.spares = spares
         self.clock = clock
-        now = clock()
-        for w in self.workers.values():
-            w.last_heartbeat = now
+        self.beats = HeartbeatTracker(heartbeat_timeout, clock)
+        self.workers = {i: self._new_worker(i) for i in range(num_workers)}
+
+    def _new_worker(self, wid: int) -> Worker:
+        self.beats.register(wid)
+        return Worker(wid, strikes=StrikeCounter(self.strike_limit))
 
     # ---- worker-side API ----------------------------------------------------
     def heartbeat(self, worker_id: int, step: int,
@@ -78,7 +92,7 @@ class Coordinator:
         w = self.workers[worker_id]
         if w.state in (WorkerState.FAILED, WorkerState.EVICTED):
             return
-        w.last_heartbeat = self.clock()
+        self.beats.beat(worker_id)
         w.last_step = max(w.last_step, step)
         if step_latency is not None:
             w.step_latencies.append(step_latency)
@@ -102,27 +116,27 @@ class Coordinator:
         for w in self.workers.values():
             if w.state in (WorkerState.FAILED, WorkerState.EVICTED):
                 continue
-            if now - w.last_heartbeat > self.heartbeat_timeout:
+            if self.beats.is_expired(w.worker_id, now):
                 w.state = WorkerState.FAILED
                 failed.append(w.worker_id)
                 continue
             if median and w.step_latencies and \
                     w.step_latencies[-1] > self.straggler_factor * median:
-                w.slow_strikes += 1
+                w.strikes.strike()
                 w.state = WorkerState.STRAGGLING
                 stragglers.append(w.worker_id)
             elif w.state == WorkerState.STRAGGLING:
                 w.state = WorkerState.HEALTHY
-                w.slow_strikes = 0
+                w.strikes.clear()
 
         # persistent stragglers: promote a spare (hot swap)
         for wid in list(stragglers):
             w = self.workers[wid]
-            if w.slow_strikes >= self.strike_limit and self.spares > 0:
+            if w.strikes.tripped and self.spares > 0:
                 self.spares -= 1
                 w.state = WorkerState.EVICTED
                 nid = max(self.workers) + 1
-                self.workers[nid] = Worker(nid, last_heartbeat=now)
+                self.workers[nid] = self._new_worker(nid)
                 return Decision(Action.PROMOTE_SPARE, failed, stragglers,
                                 restore_step=latest_committed_step)
 
@@ -132,10 +146,9 @@ class Coordinator:
                          or w.state == WorkerState.STRAGGLING]
             if self.spares >= len(failed):
                 self.spares -= len(failed)
-                now = self.clock()
                 for _ in failed:
                     nid = max(self.workers) + 1
-                    self.workers[nid] = Worker(nid, last_heartbeat=now)
+                    self.workers[nid] = self._new_worker(nid)
                 return Decision(Action.RESTART_FROM_CHECKPOINT, failed,
                                 stragglers,
                                 restore_step=latest_committed_step)

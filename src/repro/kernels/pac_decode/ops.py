@@ -765,7 +765,8 @@ def retrieve_pac_batch(col: DeltaColumn, los, his, target_page_size: int,
                        num_targets: Optional[int] = None,
                        fused: Optional[bool] = None,
                        label_filter=None,
-                       resident: Optional[bool] = None) -> PAC:
+                       resident: Optional[bool] = None,
+                       delta_ids=None) -> PAC:
     """Batched Definition 2: many row ranges -> one merged (unioned) PAC.
 
     Kernel engines take the fused decode->bitmap path whenever the target
@@ -788,6 +789,11 @@ def retrieve_pac_batch(col: DeltaColumn, los, his, target_page_size: int,
     :func:`_retrieve_pac_batch_fused`); None follows the
     ``REPRO_DEVICE_RESIDENT`` default.  Residency is purely a transfer
     optimization -- ids, PAC, and IOMeter are bit-identical either way.
+
+    ``delta_ids`` -- the batch's pending neighbor ids from the mutable
+    plane (already predicate-filtered by the caller) -- are unioned into
+    the returned PAC after the base dispatch: the memtable rows are
+    RAM-resident, so they cost no lake I/O and never touch the kernel.
     """
     los = np.asarray(los, np.int64)
     his = np.asarray(his, np.int64)
@@ -805,15 +811,18 @@ def retrieve_pac_batch(col: DeltaColumn, los, his, target_page_size: int,
                 raise ValueError(
                     f"filter covers {plan.count} vertices but the target "
                     f"id space has {num_targets}")
-        return _retrieve_pac_batch_fused(col, los, his, target_page_size,
-                                         int(num_targets), meter, engine,
-                                         plan, resident=resident)
-    ids = decode_row_ranges(col, los, his, meter, engine)
-    if ids.size == 0:
-        return PAC(target_page_size)
-    pac = PAC.from_ids(np.unique(ids), target_page_size)
-    if label_filter is not None:
-        pac = pac.intersect(label_filter.pac(target_page_size))
+        pac = _retrieve_pac_batch_fused(col, los, his, target_page_size,
+                                        int(num_targets), meter, engine,
+                                        plan, resident=resident)
+    else:
+        ids = decode_row_ranges(col, los, his, meter, engine)
+        pac = PAC.from_ids(np.unique(ids), target_page_size) if ids.size \
+            else PAC(target_page_size)
+        if label_filter is not None:
+            pac = pac.intersect(label_filter.pac(target_page_size))
+    if delta_ids is not None and len(delta_ids):
+        pac = pac.union(PAC.from_ids(np.asarray(delta_ids, np.int64),
+                                     target_page_size))
     return pac
 
 

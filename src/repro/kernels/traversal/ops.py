@@ -287,6 +287,14 @@ def k_hop_fused(adj, seeds, hops: int, filts: Sequence, meter=None,
                 include_seeds: bool = True) -> np.ndarray:
     """Fused k-hop: one scan-stepped dispatch, ids bit-identical to the
     host oracle (``core.neighbor.k_hop`` with ``fused=False``)."""
+    from repro.core.delta_segment import live_delta
+    if live_delta(adj) is not None:
+        # the traversal plan is built over the packed base only -- it
+        # cannot see pending delta rows.  ``k_hop`` routes to the host
+        # loop while the mutable plane has rows; a direct caller must not
+        # silently lose ingested edges.
+        raise ValueError("fused traversal cannot serve pending delta rows;"
+                         " compact first or use the host loop")
     col = _kernel_column(adj)
     plan = traversal_plan(adj, engine)
     n = plan.n_value

@@ -65,6 +65,18 @@ class ServeEngine:
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
+    def ingest(self, src, dst):
+        """Forward an edge batch to the retrieval plane's mutable graph.
+
+        Requires an ingest-capable ``context_fn`` (e.g.
+        :class:`~repro.serve.retrieval.GraphRetriever`); ingested edges
+        are visible to context retrieval from the next tick on.
+        """
+        if self.context_fn is None or not hasattr(self.context_fn,
+                                                  "ingest"):
+            raise ValueError("no ingest-capable context_fn attached")
+        return self.context_fn.ingest(src, dst)
+
     def _attach_context(self, admitted: List[Request]) -> None:
         """One batched lake retrieval for every admitted request's seed."""
         need = [r for r in admitted if r.context_vertex is not None]

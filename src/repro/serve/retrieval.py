@@ -73,6 +73,8 @@ class GraphRetriever:
         self.deep_pool_last = 0  # deep-context pool size of the last tick
         self.calls = 0          # batched retrievals issued (one per tick)
         self.vertices_seen = 0  # requests served across all calls
+        self.ingest_calls = 0   # ingest() batches accepted
+        self.ingest_rows = 0    # edges ingested across all batches
         if filter_cond is not None and filter_vt is None:
             raise ValueError("filter_cond requires filter_vt (the "
                              "value-side vertex table)")
@@ -119,6 +121,29 @@ class GraphRetriever:
         nbrs = decode_edge_ranges(self.adj, los, his, self.meter,
                                   self.engine)
         lengths = np.maximum(his - los, 0)
+        from repro.core.delta_segment import live_delta
+        delta = live_delta(self.adj)
+        if delta is not None:
+            # mutable plane: merge each request's pending delta neighbors
+            # into its (sorted) base list, then keep the first
+            # ``max_neighbors`` of the merge -- correct because the first
+            # k of a merge of sorted lists draws only from the first k of
+            # each input, and the base list is already clamped to k above
+            dvals, dlens = delta.lookup_batch(vs)
+            if dvals.size:
+                allseg = np.concatenate(
+                    [np.repeat(np.arange(lengths.size), lengths),
+                     np.repeat(np.arange(dlens.size), dlens)])
+                allv = np.concatenate([nbrs, dvals])
+                order = np.lexsort((allv, allseg))
+                allseg, allv = allseg[order], allv[order]
+                counts = lengths + dlens
+                starts = np.concatenate(
+                    [[0], np.cumsum(counts)[:-1]]).astype(np.int64)
+                within = np.arange(allv.size) - starts[allseg]
+                keep = within < self.max_neighbors
+                nbrs = allv[keep]
+                lengths = np.minimum(counts, self.max_neighbors)
         if self.label_filter is not None and nbrs.size:
             if not self._filter_charged:
                 # charged once: the bitmap is evaluated at first use and
@@ -166,11 +191,34 @@ class GraphRetriever:
                        else np.zeros(0, np.int32))
         return out
 
+    def ingest(self, src, dst):
+        """Ingest an edge batch into the adjacency's mutable plane.
+
+        Edges land in the delta segments (RAM-resident memtable) and are
+        served from the very next tick, unioned with the packed base at
+        dispatch time; a later compaction folds them into new packed
+        partitions without interrupting serving.  Returns the
+        :class:`~repro.core.delta_segment.DeltaSegments` plane.
+        """
+        from repro.core.delta_segment import attach_delta
+        delta = attach_delta(self.adj)
+        delta.ingest(src, dst)
+        self.ingest_calls += 1
+        self.ingest_rows += int(np.asarray(src).size)
+        return delta
+
     def stats(self) -> Dict[str, object]:
         """Per-tick batching + decoded-page cache + device-mirror
         counters (for ``ServeEngine.stats()``)."""
         s: Dict[str, object] = {"calls": self.calls,
                                 "vertices_seen": self.vertices_seen}
+        delta = getattr(self.adj, "delta", None)
+        if delta is not None:
+            # mutable plane: pending rows, zone-map pruning, compactions
+            mut = dict(delta.stats())
+            mut["ingest_calls"] = self.ingest_calls
+            mut["ingest_rows"] = self.ingest_rows
+            s["mutable"] = mut
         if self.page_cache is not None:
             s["page_cache"] = self.page_cache.stats()
         if self._cache_col is not None:

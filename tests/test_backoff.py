@@ -1,0 +1,176 @@
+"""Direct unit tests for the shared fault-tolerance primitives
+(repro/ft/backoff.py) and the fault-injection harness (repro/ft/faults.py)."""
+import numpy as np
+import pytest
+
+from repro.ft.backoff import (Backoff, HeartbeatTracker, StrikeCounter,
+                              retry_call)
+from repro.ft.faults import BOUNDARIES, FaultPlan, InjectedFault, check
+
+
+# -- Backoff ----------------------------------------------------------------
+
+def test_backoff_exponential_growth_and_cap():
+    bo = Backoff(base=0.1, factor=2.0, max_delay=1.0, jitter=0.0)
+    assert bo.delay(0) == pytest.approx(0.1)
+    assert bo.delay(1) == pytest.approx(0.2)
+    assert bo.delay(2) == pytest.approx(0.4)
+    assert bo.delay(10) == pytest.approx(1.0)  # clamped
+
+
+def test_backoff_jitter_bounds_and_seed_determinism():
+    a = Backoff(base=0.1, factor=2.0, max_delay=10.0, jitter=0.5, seed=7)
+    b = Backoff(base=0.1, factor=2.0, max_delay=10.0, jitter=0.5, seed=7)
+    seq_a = [a.delay(i) for i in range(8)]
+    seq_b = [b.delay(i) for i in range(8)]
+    assert seq_a == seq_b  # seeded schedule replays exactly
+    for i, d in enumerate(seq_a):
+        nominal = min(0.1 * 2.0 ** i, 10.0)
+        assert 0.5 * nominal <= d <= 1.5 * nominal
+
+
+def test_backoff_delays_generator_matches_delay():
+    bo = Backoff(base=0.05, factor=3.0, max_delay=5.0, jitter=0.0)
+    gen = bo.delays()
+    assert [next(gen) for _ in range(4)] == \
+        [bo.delay(i) for i in range(4)]
+
+
+def test_backoff_rejects_bad_params():
+    with pytest.raises(ValueError):
+        Backoff(base=-1.0)
+    with pytest.raises(ValueError):
+        Backoff(factor=0.5)
+    with pytest.raises(ValueError):
+        Backoff(jitter=1.0)
+
+
+# -- retry_call -------------------------------------------------------------
+
+def test_retry_call_retries_then_succeeds():
+    calls, slept = [], []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise RuntimeError("boom")
+        return "ok"
+
+    out = retry_call(flaky, retries=5,
+                     backoff=Backoff(base=0.1, factor=2.0, jitter=0.0),
+                     sleep=slept.append)
+    assert out == "ok"
+    assert len(calls) == 3
+    assert slept == pytest.approx([0.1, 0.2])
+
+
+def test_retry_call_exhausts_and_raises():
+    slept = []
+    with pytest.raises(RuntimeError):
+        retry_call(lambda: (_ for _ in ()).throw(RuntimeError("always")),
+                   retries=2, backoff=Backoff(jitter=0.0),
+                   sleep=slept.append)
+    assert len(slept) == 2  # one sleep per retry, none after the last
+
+
+def test_retry_call_only_catches_retry_on():
+    with pytest.raises(KeyError):
+        retry_call(lambda: (_ for _ in ()).throw(KeyError("x")),
+                   retries=5, retry_on=(RuntimeError,),
+                   sleep=lambda s: None)
+
+
+def test_retry_call_on_retry_observer():
+    seen = []
+
+    def fail_twice(state={"n": 0}):
+        state["n"] += 1
+        if state["n"] <= 2:
+            raise RuntimeError("x")
+        return state["n"]
+
+    retry_call(fail_twice, retries=5, backoff=Backoff(jitter=0.0),
+               sleep=lambda s: None,
+               on_retry=lambda a, d, e: seen.append((a, type(e))))
+    assert seen == [(0, RuntimeError), (1, RuntimeError)]
+
+
+# -- HeartbeatTracker -------------------------------------------------------
+
+def test_heartbeat_tracker_expiry():
+    t = {"now": 0.0}
+    hb = HeartbeatTracker(timeout=10.0, clock=lambda: t["now"])
+    hb.register("a")
+    hb.register("b")
+    t["now"] = 5.0
+    hb.beat("b")
+    t["now"] = 11.0
+    assert hb.is_expired("a")
+    assert not hb.is_expired("b")
+    assert hb.expired() == ["a"]
+    t["now"] = 16.0
+    assert sorted(hb.expired()) == ["a", "b"]
+    hb.drop("a")
+    assert hb.expired() == ["b"]
+
+
+# -- StrikeCounter ----------------------------------------------------------
+
+def test_strike_counter_trip_and_clear():
+    s = StrikeCounter(3)
+    assert not s.strike()
+    assert not s.strike()
+    assert s.strike()      # third strike trips
+    assert s.tripped
+    s.clear()
+    assert not s.tripped
+    assert s.strikes == 0
+    with pytest.raises(ValueError):
+        StrikeCounter(0)
+
+
+# -- FaultPlan --------------------------------------------------------------
+
+def test_fault_plan_trips_then_clears():
+    plan = FaultPlan({"compact.pre_swap": 2})
+    for hit in (1, 2):
+        with pytest.raises(InjectedFault) as ei:
+            plan.check("compact.pre_swap")
+        assert ei.value.boundary == "compact.pre_swap"
+        assert ei.value.hit == hit
+    plan.check("compact.pre_swap")  # trips consumed: no longer raises
+    assert plan.fired == {"compact.pre_swap": 2}
+    assert plan.remaining() == 0
+    assert plan.history == ["compact.pre_swap"] * 2
+
+
+def test_fault_plan_unarmed_boundary_is_silent():
+    plan = FaultPlan({"compact.mid_gc": 1})
+    plan.check("ingest.append")  # not armed
+    assert plan.total_fired() == 0
+
+
+def test_fault_plan_from_seed_deterministic():
+    a = FaultPlan.from_seed(11)
+    b = FaultPlan.from_seed(11)
+    assert a.trips == b.trips
+    assert set(a.trips) <= set(BOUNDARIES)
+    # across seeds, at least one differing pattern exists
+    patterns = {tuple(sorted(FaultPlan.from_seed(s).trips.items()))
+                for s in range(8)}
+    assert len(patterns) > 1
+
+
+def test_fault_plan_from_env(monkeypatch):
+    monkeypatch.delenv("REPRO_FAULT_SEED", raising=False)
+    assert FaultPlan.from_env() is None
+    assert FaultPlan.from_env(default_seed=3).trips == \
+        FaultPlan.from_seed(3).trips
+    monkeypatch.setenv("REPRO_FAULT_SEED", "5")
+    assert FaultPlan.from_env().trips == FaultPlan.from_seed(5).trips
+
+
+def test_check_helper_none_safe():
+    check(None, "compact.pre_swap")  # no plan: no-op
+    with pytest.raises(InjectedFault):
+        check(FaultPlan({"store.write": 1}), "store.write")

@@ -1,0 +1,351 @@
+"""Crash-consistent compaction: atomic swap, durability, fault recovery.
+
+The acceptance invariant: a serving schedule of ticks interleaved with
+ingest and background compaction returns ids bit-identical to a
+from-scratch rebuild of the graph visible at each tick -- under every
+injected fault boundary -- with the compactor recovering via
+retry/backoff, and the IOMeter footprint of settled (post-compaction)
+serving bit-identical to the rebuilt graph's.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from _engines import engines
+from repro.core import (BY_SRC, ENC_GRAPHAR, IOMeter, build_adjacency,
+                        neighbor_ids_batch, retrieve_neighbors_batch)
+from repro.core.compaction import (CompactionPolicy, CompactionRunner,
+                                   collect_garbage)
+from repro.core.delta_segment import (attach_delta, all_edges, ingest_edges,
+                                      live_delta)
+from repro.core.storage import GraphStore, read_table, write_table
+from repro.ft.backoff import Backoff
+from repro.ft.faults import BOUNDARIES, FaultPlan, InjectedFault
+from repro.kernels import _pad
+
+N = 300
+PAGE = 128
+TPS = 512
+
+
+def _graph(seed=3, n_edges=2500):
+    rng = np.random.default_rng(seed)
+    return build_adjacency(rng.integers(0, N, n_edges),
+                           rng.integers(0, N, n_edges), N, N, BY_SRC,
+                           ENC_GRAPHAR, page_size=PAGE)
+
+
+def _rebuilt(adj):
+    return build_adjacency(*all_edges(adj), N, N, BY_SRC, ENC_GRAPHAR,
+                           page_size=PAGE)
+
+
+# ------------------------ the swap itself --------------------------------
+
+def test_compacted_layout_bit_identical_to_rebuild():
+    adj = _graph()
+    rng = np.random.default_rng(9)
+    ingest_edges(adj, rng.integers(0, N, 200), rng.integers(0, N, 200))
+    oracle = _rebuilt(adj)
+    assert CompactionRunner(adj).compact()
+    assert live_delta(adj) is None
+    for name in ("<src>", "<dst>"):
+        a, b = adj.table[name].encoded, oracle.table[name].encoded
+        assert len(a.pages) == len(b.pages)
+        for pa, pb in zip(a.pages, b.pages):
+            assert pa.count == pb.count
+            assert pa.first_value == pb.first_value
+            assert (pa.vmin, pa.vmax) == (pb.vmin, pb.vmax)
+            np.testing.assert_array_equal(pa.packed, pb.packed)
+    np.testing.assert_array_equal(
+        adj.offsets["<offset>"].values, oracle.offsets["<offset>"].values)
+
+
+def test_swap_bumps_version_and_invalidates_caches():
+    adj = _graph()
+    col = adj.table[adj.value_col].encoded
+    v0 = col.version
+    neighbor_ids_batch(adj, np.arange(20), engine="jax")  # device mirror
+    assert col.packed_cache is not None
+    ingest_edges(adj, [1], [2])
+    assert CompactionRunner(adj).compact()
+    assert col.version == v0 + 1
+    assert col.packed_cache is None              # mirrors re-ship lazily
+
+
+def test_rows_ingested_after_snapshot_survive_compaction():
+    """drop_rows removes exactly the frozen snapshot -- later ingests
+    keep serving from the delta path (multiset difference, not prefix)."""
+    adj = _graph()
+    d = attach_delta(adj)
+    d.ingest([1, 1, 2], [5, 5, 6])
+    frozen = d.snapshot()
+    d.ingest([1, 3], [5, 7])                     # post-snapshot, one a dup
+    d.drop_rows(frozen)
+    assert d.pending_rows() == 2
+    vals, _ = d.lookup_batch(np.asarray([1, 3], np.int64))
+    np.testing.assert_array_equal(vals, [5, 7])
+
+
+def test_policy_gates_compaction():
+    adj = _graph()
+    runner = CompactionRunner(adj, policy=CompactionPolicy(min_delta_rows=50))
+    assert not runner.maybe_compact()            # nothing pending
+    ingest_edges(adj, np.arange(10), np.arange(10))
+    assert not runner.maybe_compact()            # below threshold
+    assert live_delta(adj) is not None
+    rng = np.random.default_rng(0)
+    ingest_edges(adj, rng.integers(0, N, 45), rng.integers(0, N, 45))
+    assert runner.maybe_compact()                # 55 >= 50
+    assert live_delta(adj) is None
+
+
+# -------------------- interleaved serving invariant ----------------------
+
+def _schedule(adj, runner, plan_ticks, engine, meter):
+    """serve/ingest/compact schedule; returns per-serve-tick ids and the
+    per-tick (bytes, requests) deltas the schedule charged."""
+    rng = np.random.default_rng(55)
+    ids, costs, oracle_edges = [], [], []
+    for op in plan_ticks:
+        if op == "serve":
+            vs = rng.integers(0, N, 24)
+            b0, r0 = meter.nbytes, meter.nrequests
+            ids.append(neighbor_ids_batch(adj, vs, meter, engine=engine))
+            costs.append((meter.nbytes - b0, meter.nrequests - r0))
+            oracle_edges.append(all_edges(adj))
+        elif op == "ingest":
+            s, d = rng.integers(0, N, 40), rng.integers(0, N, 40)
+            for _ in range(4):
+                try:
+                    ingest_edges(adj, s, d)
+                    break
+                except InjectedFault:
+                    continue                     # atomic: retry same batch
+        elif op == "compact":
+            runner.compact()
+    return ids, costs, oracle_edges
+
+
+SCHEDULE = ["serve", "ingest", "serve", "ingest", "serve", "compact",
+            "serve", "ingest", "serve", "compact", "serve"]
+
+
+@pytest.mark.parametrize("engine", engines())
+@pytest.mark.parametrize("boundary", BOUNDARIES)
+def test_interleaved_serving_invariant_under_fault(tmp_path, engine,
+                                                   boundary):
+    """Every serve tick's ids equal a from-scratch rebuild of the edges
+    visible at that tick, under a fault at every boundary; and the
+    schedule's per-tick meter trace is identical to the no-fault run."""
+    plan = FaultPlan({boundary: 2})
+    adj = _graph()
+    store = GraphStore(str(tmp_path / "lake"), faults=plan)
+    attach_delta(adj, faults=plan)
+    runner = CompactionRunner(adj, store=store, faults=plan,
+                              sleep=lambda _s: None)
+    meter = IOMeter()
+    ids, costs, edges = _schedule(adj, runner, SCHEDULE, engine, meter)
+
+    # no-fault reference run (fresh graph, same deterministic schedule)
+    adj2 = _graph()
+    runner2 = CompactionRunner(adj2, sleep=lambda _s: None)
+    meter2 = IOMeter()
+    ids2, costs2, _ = _schedule(adj2, runner2, SCHEDULE, engine, meter2)
+
+    for i, (got, (s, d)) in enumerate(zip(ids, edges)):
+        # rebuild the graph visible at tick i from its recorded edge set
+        oracle = build_adjacency(s, d, N, N, BY_SRC, ENC_GRAPHAR,
+                                 page_size=PAGE)
+        np.testing.assert_array_equal(got, ids2[i])
+        want = neighbor_ids_batch(oracle, _serve_batch(i), engine="numpy")
+        np.testing.assert_array_equal(got, want)
+    assert costs == costs2                       # fault-invariant footprint
+    # schedule ends compacted: the lake holds a committed generation and
+    # no torn temp files, whatever the fault plan did
+    files = sorted(os.listdir(store.root))
+    assert not any(".tmp-" in f for f in files), files
+    if runner.compactions:
+        assert store.current_generation() >= 1
+
+
+def _serve_batch(i):
+    """The i-th serve tick's batch under SCHEDULE's deterministic rng."""
+    rng = np.random.default_rng(55)
+    out = None
+    k = 0
+    for op in SCHEDULE:
+        if op == "serve":
+            vs = rng.integers(0, N, 24)
+            if k == i:
+                out = vs
+            k += 1
+        elif op == "ingest":
+            rng.integers(0, N, 40)
+            rng.integers(0, N, 40)
+    return out
+
+
+@pytest.mark.parametrize("engine", engines())
+def test_seeded_fault_plan_from_env_matrix(engine):
+    """The CI fault matrix: REPRO_FAULT_SEED derives a boundary->trips
+    plan; serving + compaction must end bit-identical to the rebuild
+    whatever the seed draws."""
+    seed = int(os.environ.get("REPRO_FAULT_SEED", "1"))
+    plan = FaultPlan.from_seed(seed)
+    adj = _graph(seed=seed)
+    attach_delta(adj, faults=plan)
+    runner = CompactionRunner(adj, faults=plan, max_attempts=8,
+                              sleep=lambda _s: None)
+    rng = np.random.default_rng(seed)
+    for _ in range(3):
+        try:
+            ingest_edges(adj, rng.integers(0, N, 30),
+                         rng.integers(0, N, 30))
+        except InjectedFault:
+            ingest_edges(adj, rng.integers(0, N, 30),
+                         rng.integers(0, N, 30))  # retry a fresh batch
+        runner.compact()
+    oracle = _rebuilt(adj)
+    vs = rng.integers(0, N, 32)
+    got = neighbor_ids_batch(adj, vs, engine=engine)
+    want = neighbor_ids_batch(oracle, vs, engine="numpy")
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------- settled state: meters + zero retrace -------------------
+
+@pytest.mark.parametrize("engine", engines())
+def test_settled_meter_bit_identical_to_rebuild(engine):
+    adj = _graph()
+    rng = np.random.default_rng(4)
+    ingest_edges(adj, rng.integers(0, N, 90), rng.integers(0, N, 90))
+    oracle = _rebuilt(adj)
+    assert CompactionRunner(adj).compact()
+    vs = rng.integers(0, N, 40)
+    m1, m2 = IOMeter(), IOMeter()
+    np.testing.assert_array_equal(
+        neighbor_ids_batch(adj, vs, m1, engine=engine),
+        neighbor_ids_batch(oracle, vs, m2, engine=engine))
+    assert (m1.nbytes, m1.nrequests) == (m2.nbytes, m2.nrequests)
+
+
+@pytest.mark.parametrize("engine", engines(kernel_only=True))
+def test_zero_retrace_steady_state_after_compaction(engine):
+    adj = _graph()
+    rng = np.random.default_rng(6)
+    batches = [rng.integers(0, N, s) for s in rng.integers(40, 64, 6)]
+    for vs in batches:
+        retrieve_neighbors_batch(adj, vs, TPS, engine=engine, fused=True,
+                                 resident=True)
+    ingest_edges(adj, rng.integers(0, N, 50), rng.integers(0, N, 50))
+    assert CompactionRunner(adj).compact()
+    for vs in batches:                           # re-warm the new epoch
+        retrieve_neighbors_batch(adj, vs, TPS, engine=engine, fused=True,
+                                 resident=True)
+    before = _pad.trace_count()
+    for vs in batches:
+        retrieve_neighbors_batch(adj, vs, TPS, engine=engine, fused=True,
+                                 resident=True)
+    assert _pad.trace_count() == before          # jit cache hits only
+
+
+# ------------------------- durability + GC -------------------------------
+
+def test_store_write_crash_leaves_old_file_intact(tmp_path):
+    adj = _graph()
+    path = str(tmp_path / "edges.gar")
+    write_table(adj.table, path)
+    before = open(path, "rb").read()
+    adj2 = _graph(seed=8)
+    with pytest.raises(InjectedFault):
+        write_table(adj2.table, path, FaultPlan({"store.write": 1}))
+    assert open(path, "rb").read() == before     # old contents intact
+    turds = [f for f in os.listdir(tmp_path) if ".tmp-" in f]
+    assert turds                                 # torn staging file left
+    store = GraphStore(str(tmp_path))
+    assert sorted(collect_garbage(store)) == sorted(turds)
+    write_table(adj2.table, path)                # retry goes through
+    t = read_table(path)
+    np.testing.assert_array_equal(t["<dst>"].read_all(),
+                                  adj2.table["<dst>"].read_all())
+
+
+def test_manifest_flip_and_generation_gc(tmp_path):
+    adj = _graph()
+    store = GraphStore(str(tmp_path / "lake"))
+    store.write(adj.table)                       # legacy layout first
+    store.write(adj.offsets)
+    name = adj.table.name
+    runner = CompactionRunner(adj, store=store, sleep=lambda _s: None)
+    rng = np.random.default_rng(12)
+    ingest_edges(adj, rng.integers(0, N, 60), rng.integers(0, N, 60))
+    assert runner.compact()
+    assert store.current_generation() == 1
+    files = set(os.listdir(store.root))
+    assert f"{name}.g1.gar" in files
+    assert f"{name}.gar" not in files            # superseded legacy GC'd
+    ingest_edges(adj, rng.integers(0, N, 60), rng.integers(0, N, 60))
+    assert runner.compact()
+    assert store.current_generation() == 2
+    files = set(os.listdir(store.root))
+    assert f"{name}.g2.gar" in files
+    assert f"{name}.g1.gar" not in files         # old generation GC'd
+    # the committed generation round-trips to exactly the live layout
+    t = store.read(name)
+    np.testing.assert_array_equal(t["<dst>"].read_all(),
+                                  adj.table["<dst>"].read_all())
+    assert store.list_tables() == sorted({name, adj.offsets.name})
+
+
+def test_uncommitted_generation_is_invisible_and_collected(tmp_path):
+    adj = _graph()
+    store = GraphStore(str(tmp_path / "lake"))
+    store.write(adj.table)
+    store.write_generation(adj.table, 7)         # staged, never committed
+    assert store.list_tables() == [adj.table.name]
+    t = store.read(adj.table.name)               # legacy file still serves
+    assert t.num_rows == adj.table.num_rows
+    removed = collect_garbage(store)
+    assert removed == [f"{adj.table.name}.g7.gar"]
+
+
+# ------------------------- retry / backoff -------------------------------
+
+def test_compactor_retries_follow_seeded_backoff_schedule():
+    adj = _graph()
+    plan = FaultPlan({"compact.merge": 2})
+    attach_delta(adj)
+    ingest_edges(adj, [1], [2])
+    slept = []
+    runner = CompactionRunner(adj, faults=plan,
+                              backoff=Backoff(base=0.01, max_delay=0.25,
+                                              seed=42),
+                              sleep=slept.append)
+    assert runner.compact()
+    ref = Backoff(base=0.01, max_delay=0.25, seed=42)
+    assert slept == [ref.delay(0), ref.delay(1)]
+    assert runner.faults_hit == 2 and runner.compactions == 1
+
+
+def test_compactor_gives_up_gracefully_and_resumes():
+    adj = _graph()
+    plan = FaultPlan({"compact.merge": 99})
+    attach_delta(adj, faults=plan)
+    rng = np.random.default_rng(1)
+    ingest_edges(adj, rng.integers(0, N, 30), rng.integers(0, N, 30))
+    oracle = _rebuilt(adj)
+    runner = CompactionRunner(adj, faults=plan, max_attempts=3,
+                              sleep=lambda _s: None)
+    assert not runner.compact()                  # exhausted, no exception
+    assert runner.gave_up == 1
+    d = live_delta(adj)
+    assert d is not None and d.pending_rows() == 30
+    vs = rng.integers(0, N, 20)                  # delta path keeps serving
+    np.testing.assert_array_equal(
+        neighbor_ids_batch(adj, vs),
+        neighbor_ids_batch(oracle, vs))
+    runner.faults = FaultPlan({})                # faults cleared: resume
+    assert runner.compact()
+    assert live_delta(adj) is None

@@ -1,0 +1,278 @@
+"""Mutable graph plane: delta-segment ingest unioned with the packed base.
+
+The invariant every test here leans on: a graph serving with pending
+delta rows must return ids **bit-identical** to a from-scratch rebuild
+over base + deltas, on every engine, for every read path (batched
+neighbors, PAC retrieval, filtered retrieval, k-hop) -- and the IOMeter
+footprint must be identical across engines while deltas are pending
+(delta reads are RAM-resident and charge no lake I/O, mirroring the
+decoded-page LRU's hit convention).
+"""
+import numpy as np
+import pytest
+
+from _engines import engines
+from repro.core import (BY_SRC, ENC_GRAPHAR, IOMeter, L, LabelFilter,
+                        build_adjacency, k_hop, neighbor_ids_batch,
+                        pack_column, retrieve_neighbors_batch)
+from repro.core.delta_segment import (attach_delta, all_edges, base_edges,
+                                      ingest_edges, live_delta)
+from repro.core.schema import PropertySchema, VertexTypeSchema
+from repro.core.table import TokensColumn
+from repro.core.vertex import VertexTable
+from repro.data.synthetic import clustered_labels, powerlaw_graph
+from repro.ft.faults import FaultPlan, InjectedFault
+
+N = 600
+NVAL = 500
+PAGE = 128
+TPS = 512
+
+
+def _graph(seed=3, n_edges=4000):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, N, n_edges)
+    dst = rng.integers(0, NVAL, n_edges)
+    return build_adjacency(src, dst, N, NVAL, BY_SRC, ENC_GRAPHAR,
+                           page_size=PAGE)
+
+
+def _ingest_some(adj, seed=11, rows=150):
+    rng = np.random.default_rng(seed)
+    ingest_edges(adj, rng.integers(0, N, rows), rng.integers(0, NVAL, rows))
+
+
+def _rebuilt(adj):
+    """From-scratch oracle over base + pending deltas."""
+    return build_adjacency(*all_edges(adj), N, NVAL, BY_SRC, ENC_GRAPHAR,
+                           page_size=PAGE)
+
+
+@pytest.fixture()
+def batch():
+    rng = np.random.default_rng(5)
+    vs = rng.integers(0, N, 48)
+    return np.concatenate([vs, vs[:7]])         # duplicates included
+
+
+# ------------------------- union == rebuild ------------------------------
+
+@pytest.mark.parametrize("engine", engines())
+def test_neighbor_union_matches_rebuild(batch, engine):
+    adj = _graph()
+    _ingest_some(adj)
+    oracle = _rebuilt(adj)
+    for unique in (True, False):
+        got = neighbor_ids_batch(adj, batch, engine=engine, unique=unique)
+        want = neighbor_ids_batch(oracle, batch, engine="numpy",
+                                  unique=unique)
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("engine", engines())
+def test_pac_retrieval_union_matches_rebuild(batch, engine):
+    adj = _graph()
+    _ingest_some(adj)
+    oracle = _rebuilt(adj)
+    got = retrieve_neighbors_batch(adj, batch, TPS, engine=engine)
+    want = retrieve_neighbors_batch(oracle, batch, TPS, engine="numpy")
+    np.testing.assert_array_equal(got.to_ids(), want.to_ids())
+
+
+@pytest.mark.parametrize("engine", engines())
+def test_filtered_retrieval_union_matches_rebuild(batch, engine):
+    adj = _graph()
+    _ingest_some(adj)
+    oracle = _rebuilt(adj)
+    labels = clustered_labels(NVAL, ["A", "B"], density=0.3, run_scale=32,
+                              seed=9)
+    vt = VertexTable.build(
+        VertexTypeSchema("v", [PropertySchema("x", "int64")],
+                         labels=["A", "B"], page_size=PAGE),
+        {"x": np.arange(NVAL)}, labels, num_vertices=NVAL)
+    filt = LabelFilter(vt, L("A") & ~L("B"))
+    got = retrieve_neighbors_batch(adj, batch, TPS, engine=engine,
+                                   filter=filt)
+    want = retrieve_neighbors_batch(oracle, batch, TPS, engine="numpy",
+                                    filter=LabelFilter(vt, L("A") & ~L("B")))
+    np.testing.assert_array_equal(got.to_ids(), want.to_ids())
+
+
+@pytest.mark.parametrize("engine", engines())
+def test_k_hop_union_matches_rebuild(engine):
+    # value ids must be valid seeds for hop 2: use a square graph
+    rng = np.random.default_rng(21)
+    adj = build_adjacency(rng.integers(0, N, 4000),
+                          rng.integers(0, N, 4000), N, N, BY_SRC,
+                          ENC_GRAPHAR, page_size=PAGE)
+    ingest_edges(adj, rng.integers(0, N, 120), rng.integers(0, N, 120))
+    oracle = build_adjacency(*all_edges(adj), N, N, BY_SRC, ENC_GRAPHAR,
+                             page_size=PAGE)
+    seeds = rng.integers(0, N, 9)
+    for k in (1, 2, 3):
+        got = k_hop(adj, seeds, k, engine=engine)
+        want = k_hop(oracle, seeds, k, engine="numpy")
+        np.testing.assert_array_equal(got, want)
+
+
+def test_fused_traversal_refuses_pending_deltas():
+    from repro.kernels.traversal.ops import k_hop_fused, plan_supported
+    rng = np.random.default_rng(2)
+    adj = build_adjacency(rng.integers(0, N, 2000),
+                          rng.integers(0, N, 2000), N, N, BY_SRC,
+                          ENC_GRAPHAR, page_size=PAGE)
+    assert plan_supported(adj)
+    ingest_edges(adj, [1], [2])
+    with pytest.raises(ValueError, match="pending delta"):
+        k_hop_fused(adj, np.arange(4), 2, [None, None], engine="jax")
+
+
+# --------------------- accounting under pending writes -------------------
+
+@pytest.mark.parametrize("engine", engines())
+def test_meter_identical_across_engines_while_pending(batch, engine):
+    """Delta reads are RAM-resident: the lake footprint under pending
+    writes is exactly the base footprint, identical on every engine."""
+    adj_np = _graph()
+    _ingest_some(adj_np)
+    adj_e = _graph()
+    _ingest_some(adj_e)
+    m_np, m_e = IOMeter(), IOMeter()
+    neighbor_ids_batch(adj_np, batch, m_np, engine="numpy")
+    neighbor_ids_batch(adj_e, batch, m_e, engine=engine)
+    assert (m_e.nbytes, m_e.nrequests) == (m_np.nbytes, m_np.nrequests)
+
+
+def test_zone_maps_prune_segments():
+    adj = _graph()
+    # two far-apart value bands land in disjoint segment hulls
+    ingest_edges(adj, np.arange(40), np.zeros(40, np.int64))
+    d = live_delta(adj)
+    before = d.segments_pruned
+    # a qualifying range far above every ingested value prunes all
+    ids = d.unique_ids(np.arange(40), qual=(NVAL - 2, NVAL - 1))
+    assert ids.size == 0
+    assert d.segments_pruned > before
+
+
+# ----------------------------- ingest semantics --------------------------
+
+def test_ingest_atomicity_under_fault():
+    """A crash mid-append publishes nothing; the retry applies the batch
+    exactly once (stage-then-publish, no half/double-apply)."""
+    adj = _graph()
+    plan = FaultPlan({"ingest.append": 1})
+    d = attach_delta(adj, faults=plan)
+    src = np.asarray([1, 2, 3, 1], np.int64)
+    dst = np.asarray([4, 5, 6, 4], np.int64)
+    with pytest.raises(InjectedFault):
+        d.ingest(src, dst)
+    assert d.pending_rows() == 0 and live_delta(adj) is None
+    d.ingest(src, dst)                           # retry: exactly once
+    assert d.pending_rows() == 4
+    vals, lens = d.lookup_batch(np.asarray([1], np.int64))
+    np.testing.assert_array_equal(vals, [4, 4])
+
+
+def test_ingest_validates_bounds():
+    adj = _graph()
+    d = attach_delta(adj)
+    with pytest.raises(ValueError):
+        d.ingest([N + 5], [0])
+    with pytest.raises(ValueError):
+        d.ingest([0], [NVAL + 5])
+    assert d.pending_rows() == 0
+
+
+def test_write_once_path_untouched_until_first_ingest():
+    adj = _graph()
+    assert live_delta(adj) is None
+    attach_delta(adj)
+    assert live_delta(adj) is None               # attached but empty
+    ingest_edges(adj, [0], [0])
+    assert live_delta(adj) is not None
+
+
+def test_all_edges_roundtrip():
+    adj = _graph()
+    b = base_edges(adj)
+    _ingest_some(adj, rows=17)
+    s, t = all_edges(adj)
+    assert s.size == b[0].size + 17 and t.size == b[1].size + 17
+
+
+# ------------------- poisoned mirror: degrade + heal ---------------------
+
+@pytest.mark.parametrize("engine", engines(kernel_only=True))
+def test_poisoned_mirror_falls_back_to_host_oracle(batch, engine):
+    adj = _graph()
+    oracle = _rebuilt(adj)
+    col = adj.table[adj.value_col].encoded
+    # materialize the device mirror, then poison it
+    neighbor_ids_batch(adj, batch, engine=engine)
+    packed = col.packed_cache
+    assert packed is not None
+    packed.poison()
+    got = neighbor_ids_batch(adj, batch, engine=engine)
+    want = neighbor_ids_batch(oracle, batch, engine="numpy")
+    np.testing.assert_array_equal(got, want)
+    assert packed.fallbacks > 0
+    assert packed.device_stats()["poisoned"] is True
+    # heal: any version bump rebuilds a clean mirror
+    ingest_edges(adj, [0], [0])
+    oracle2 = _rebuilt(adj)
+    got2 = neighbor_ids_batch(adj, batch, engine=engine)
+    np.testing.assert_array_equal(
+        got2, neighbor_ids_batch(oracle2, batch, engine="numpy"))
+
+
+# ------------------------- serve-plane integration -----------------------
+
+@pytest.mark.parametrize("engine", engines())
+def test_retriever_serves_ingested_edges(engine):
+    from repro.serve.retrieval import GraphRetriever
+    rng = np.random.default_rng(33)
+    adj = _graph()
+    tok = TokensColumn("tokens",
+                       [rng.integers(0, 99, 6).astype(np.int32)
+                        for _ in range(NVAL)], PAGE)
+    r = GraphRetriever(adj, tok, max_neighbors=3, engine=engine)
+    vs = rng.integers(0, N, 16)
+    r(vs)                                        # warm, write-once tick
+    r.ingest(rng.integers(0, N, 60), rng.integers(0, NVAL, 60))
+    oracle = _rebuilt(adj)
+    r2 = GraphRetriever(oracle, tok, max_neighbors=3, engine="numpy")
+    got, want = r(vs), r2(vs)
+    assert len(got) == len(want)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(a, b)
+    mut = r.stats()["mutable"]
+    assert mut["ingest_calls"] == 1 and mut["ingest_rows"] == 60
+    assert mut["pending_rows"] == 60
+
+
+def test_serve_engine_ingest_forwarder():
+    from repro.serve.engine import ServeEngine
+
+    class _Ctx:
+        def __init__(self):
+            self.got = None
+
+        def __call__(self, vs):
+            return [np.zeros(0, np.int32)] * len(vs)
+
+        def ingest(self, src, dst):
+            self.got = (list(src), list(dst))
+            return "delta"
+
+    class _LM:
+        def init_cache(self, *a, **k):
+            return {}
+
+    eng = ServeEngine.__new__(ServeEngine)
+    eng.context_fn = _Ctx()
+    assert eng.ingest([1, 2], [3, 4]) == "delta"
+    assert eng.context_fn.got == ([1, 2], [3, 4])
+    eng.context_fn = None
+    with pytest.raises(ValueError, match="ingest-capable"):
+        eng.ingest([1], [2])

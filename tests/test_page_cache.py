@@ -217,3 +217,72 @@ def test_single_vertex_read_range_meters_like_kernel_engines():
     # the numpy single-vertex path (read_range) must share the LRU's
     # miss-only accounting with the kernel engines
     assert meters["numpy"] == meters["jax"] == meters["pallas"]
+
+
+# ---------------- mutation staleness (property-based) ---------------------
+#
+# The mutable plane's correctness hinges on one rule: every derived cache
+# keys on ``DeltaColumn.version``, so no interleaving of in-place page
+# writes (``set_page``/``append_page``) and warm-cache reads may ever
+# serve stale rows -- on any engine, partitioned or not.
+
+from _hypothesis_shim import given, settings, st
+from repro.core import partition_column
+from repro.core.encoding import delta_encode_page
+
+SMALL = 32
+
+
+def _run_staleness_ops(seed, ops, engine, parts):
+    # full pages only: the row -> page mapping (row // page_size) is a
+    # layout invariant, so appends and in-place rewrites are row-group
+    # sized (exactly how the mutable plane's compactor writes them)
+    rng = np.random.default_rng(seed)
+    mirror = np.sort(rng.integers(0, 1 << 20, 3 * SMALL))
+    col = delta_encode_column(np.asarray(mirror, np.int64), SMALL)
+    attach_page_cache(col, 64)
+    if parts:
+        partition_column(col, parts)
+    for kind, arg in ops:
+        if kind == 0:                       # append a fresh full page
+            vals = np.sort(rng.integers(0, 1 << 20, SMALL))
+            col.append_page(delta_encode_page(vals))
+            mirror = np.concatenate([mirror, vals])
+        elif kind == 1:                     # rewrite any page in place
+            i = arg % len(col.pages)
+            vals = np.sort(rng.integers(0, 1 << 20, SMALL))
+            col.set_page(i, delta_encode_page(vals))
+            mirror = mirror.copy()
+            mirror[i * SMALL:(i + 1) * SMALL] = vals
+        else:                               # warm-cache read, checked
+            lo = arg % max(col.count, 1)
+            hi = min(lo + 1 + (arg % (2 * SMALL)), col.count)
+            got = pdo.decode_row_ranges(col, np.asarray([lo]),
+                                        np.asarray([hi]), None, engine)
+            np.testing.assert_array_equal(got, mirror[lo:hi])
+    # final full read must match the mirror exactly
+    got = pdo.decode_row_ranges(col, np.asarray([0]),
+                                np.asarray([col.count]), None, engine)
+    np.testing.assert_array_equal(got, mirror)
+
+
+@pytest.mark.parametrize("engine", engines())
+@pytest.mark.parametrize("parts", [0, 3])
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       ops=st.lists(st.tuples(st.integers(min_value=0, max_value=2),
+                              st.integers(min_value=0, max_value=10_000)),
+                    min_size=1, max_size=10))
+@settings(max_examples=15, deadline=None)
+def test_version_staleness_property(engine, parts, seed, ops):
+    _run_staleness_ops(seed, ops, engine, parts)
+
+
+@pytest.mark.parametrize("engine", engines())
+@pytest.mark.parametrize("parts", [0, 3])
+def test_version_staleness_seeded(engine, parts):
+    """Deterministic driver of the same property (hypothesis optional)."""
+    for seed in (0, 7, 23, 91):
+        rng = np.random.default_rng(seed + 1000)
+        ops = [(int(rng.integers(0, 3)), int(rng.integers(0, 10_000)))
+               for _ in range(12)]
+        _run_staleness_ops(seed, ops, engine, parts)
