@@ -15,8 +15,8 @@ from . import (bench_batch_scaling, bench_complex_filter, bench_e2e,
                bench_ingest, bench_kernels, bench_label_filter,
                bench_label_scaling, bench_label_storage, bench_media,
                bench_neighbor, bench_partition, bench_pipeline,
-               bench_resident, bench_simple_filter, bench_storage,
-               bench_transform, bench_traversal)
+               bench_resident, bench_serving, bench_simple_filter,
+               bench_storage, bench_transform, bench_traversal)
 from .util import header, set_suite, write_json
 
 SUITES = {
@@ -38,6 +38,7 @@ SUITES = {
     "table3_e2e": bench_e2e.run,
     "pipeline": bench_pipeline.run,
     "kernels": bench_kernels.run,
+    "serving": bench_serving.run,
 }
 
 
@@ -47,13 +48,13 @@ def main() -> None:
                     help="comma-separated suite names")
     ap.add_argument("--json", default=None,
                     help="machine-readable results path ('' to skip); "
-                         "defaults to BENCH_PR7.json, or bench_smoke.json "
+                         "defaults to BENCH_PR8.json, or bench_smoke.json "
                          "under REPRO_BENCH_SMOKE so shrunk-workload rows "
                          "never overwrite the tracked trajectory")
     args = ap.parse_args()
     if args.json is None:
         args.json = ("bench_smoke.json" if os.environ.get("REPRO_BENCH_SMOKE")
-                     else "BENCH_PR7.json")
+                     else "BENCH_PR8.json")
     names = (args.only.split(",") if args.only else list(SUITES))
     header()
     t0 = time.perf_counter()

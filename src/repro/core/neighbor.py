@@ -329,7 +329,10 @@ def k_hop(adj: AdjacencyTable, seeds: np.ndarray, hops: int,
         # pending the host loop serves (it unions the mutable plane per
         # hop); a poisoned device mirror routes the same way.  Once
         # compaction drains the plane and bumps the version, the fused
-        # plan rebuilds and zero-retrace steady state resumes.
+        # plan rebuilds and zero-retrace steady state resumes.  Counted
+        # so serving stats show the degradation (``traversal.fallbacks``).
+        from repro.kernels.traversal.ops import note_traversal_fallback
+        note_traversal_fallback(adj)
         fused = False
     if fused:
         from repro.kernels.traversal.ops import k_hop_fused

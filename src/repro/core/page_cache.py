@@ -96,6 +96,21 @@ class DecodedPageCache:
         return hits, miss
 
     # -- bookkeeping ----------------------------------------------------------
+    def snapshot(self) -> Tuple:
+        """Cheap point-in-time state for speculative consumers (the
+        pipelined serving plane prefetches pages under a prediction and
+        must be able to rewind exactly): entry *ordering* is part of the
+        state -- recency drives eviction -- so the OrderedDict is
+        shallow-copied (decoded rows are never mutated in place)."""
+        return (OrderedDict(self._pages), self.hits, self.misses,
+                self.evictions, self.version)
+
+    def restore(self, state: Tuple) -> None:
+        """Rewind to a :meth:`snapshot` (copying again, so one snapshot
+        can back out several speculations)."""
+        pages, self.hits, self.misses, self.evictions, self.version = state
+        self._pages = OrderedDict(pages)
+
     def clear(self) -> None:
         self._pages.clear()
 

@@ -29,6 +29,7 @@ Two cross-cutting performance layers (PR 2):
 from __future__ import annotations
 
 import os
+from collections import deque
 from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
@@ -79,18 +80,32 @@ RANGE_CLASS_MIN = 64
 #: path is validated without real accelerators).
 SHARD_MIN_PAGES = int(os.environ.get("REPRO_SHARD_MIN_PAGES", "48"))
 
-#: (engine, n_words) -> previous dispatch's bitmap plane; handed back to
-#: the resident kernel as its aliased output buffer so steady-state
-#: serving ticks reuse the device allocation instead of growing one per
-#: dispatch (the host copies the plane out before the next dispatch).
-_WORDS_POOL: Dict[Tuple[str, int], object] = {}
+#: (engine, n_words) -> ring of the two most recent dispatches' bitmap
+#: planes, handed back to the resident kernel as its aliased output
+#: buffer so steady-state serving ticks reuse device allocations instead
+#: of growing one per dispatch.  The ring is **double-buffered**: a
+#: dispatch donates the *older* of the two pooled buffers, never the
+#: most recent output -- so with pipelined serving (retrieval issued
+#: asynchronously in the decode's shadow, host copy-out deferred until
+#: the result is consumed) two in-flight dispatches can never alias one
+#: plane.  Steady state settles at exactly two buffers per class.
+_WORDS_POOL: Dict[Tuple[str, int], "deque"] = {}
 
 
 def _words_buffer(engine: str, n_words: int):
-    buf = _WORDS_POOL.get((engine, n_words))
-    if buf is None:
-        buf = jnp.zeros(n_words, jnp.uint32)
-    return buf
+    ring = _WORDS_POOL.get((engine, n_words))
+    if ring is not None and len(ring) >= 2:
+        # oldest pooled plane: its dispatch is two behind, its host copy
+        # long consumed -- safe to donate even with one still in flight
+        return ring.popleft()
+    return jnp.zeros(n_words, jnp.uint32)
+
+
+def _pool_words(engine: str, n_words: int, buf) -> None:
+    ring = _WORDS_POOL.setdefault((engine, n_words), deque())
+    ring.append(buf)
+    while len(ring) > 2:
+        ring.popleft()
 
 
 def reset_dispatch_pools() -> None:
@@ -139,10 +154,13 @@ def _charge_pages(col: DeltaColumn, pages: Sequence[int], meter) -> None:
                  miss_runs(pages))
 
 
-def _page_index_vector(pages: Sequence[int]) -> np.ndarray:
+def _page_index_vector(pages: Sequence[int], total_pages: int) -> np.ndarray:
     """int32 page-index vector padded to a shared pow2 size class (the
-    only thing the host ships for a resident-column decode)."""
-    idx = np.zeros(size_class(len(pages), PAGE_CLASS_MIN), np.int32)
+    only thing the host ships for a resident-column decode), capped at
+    the (rounded) whole column -- a gather cannot name more distinct
+    rows than the column has, so padding past it is pure wasted decode
+    (the stacked-plan ladder cap of the sharded path, backported)."""
+    idx = np.zeros(_page_class(len(pages), total_pages), np.int32)
     idx[:len(pages)] = pages
     return idx
 
@@ -158,13 +176,15 @@ def _stack_index(parts, pages: np.ndarray,
 
 
 def _page_class(n: int, stack_rows: int) -> int:
-    """Page-padding class for a partitioned dispatch: the shared pow2
-    ladder, capped at the (PAGE_CLASS_MIN-rounded) whole stack.  The
-    stacked plan bounds how many distinct rows a gather can name, so
-    padding past it is pure wasted decode -- at large page counts the
-    uncapped pow2 ladder of the monolithic path over-decodes by up to
-    ~2x (e.g. 157 touched pages pad to 256 there, 160 here).  The cap
-    adds at most one extra jit size class per column."""
+    """Page-padding class for a resident dispatch: the shared pow2
+    ladder, capped at the (PAGE_CLASS_MIN-rounded) whole plan --
+    ``stack_rows`` is the stacked partition plan's row count on the
+    sharded paths and the column's page count on the monolithic ones.
+    The plan bounds how many distinct rows a gather can name, so padding
+    past it is pure wasted decode -- at large page counts the uncapped
+    pow2 ladder over-decodes by up to ~2x (e.g. 157 touched pages pad
+    to 256 uncapped, 160 capped).  The cap adds at most one extra jit
+    size class per column."""
     return min(size_class(n, PAGE_CLASS_MIN),
                next_multiple(stack_rows, PAGE_CLASS_MIN))
 
@@ -290,7 +310,7 @@ def _decode_page_matrix(col: DeltaColumn, pages: Sequence[int],
         # decodes rows on device
         packed = pack_column(col)
         plan = packed.device_plan(engine)
-        idx = _page_index_vector(pages)
+        idx = _page_index_vector(pages, len(col.pages))
         if engine == "pallas":
             ids = K.gather_decode_pallas(*plan, jnp.asarray(idx),
                                          page_size=ps)
@@ -558,7 +578,7 @@ def _retrieve_pac_batch_sharded(col: DeltaColumn, parts, los, his, pages,
         else:
             words = out
         host_words = np.asarray(words)
-        _WORDS_POOL[(engine, n_words)] = words  # reuse next dispatch
+        _pool_words(engine, n_words, words)  # reuse 2 dispatches later
         return PAC.from_dense_bitmap(host_words, target_page_size)
     # SPMD tail: bucket per device and dispatch across the mesh
     import jax
@@ -677,8 +697,10 @@ def _retrieve_pac_batch_fused(col: DeltaColumn, los, his,
                                         los, his, ps)
         plan = pack_column(col).device_plan(engine)
         # one staging vector [idx | gidx | total] = one device put per
-        # dispatch (three separate puts were a measurable fixed cost)
-        p_pad = size_class(len(pages), PAGE_CLASS_MIN)
+        # dispatch (three separate puts were a measurable fixed cost);
+        # page padding capped at the whole column (sharded-path ladder
+        # cap, backported to the monolithic resident dispatch)
+        p_pad = _page_class(len(pages), len(col.pages))
         staged = np.zeros(p_pad + len(gidx) + 1, np.int32)
         staged[:len(pages)] = pages
         staged[p_pad:-1] = gidx
@@ -713,7 +735,7 @@ def _retrieve_pac_batch_fused(col: DeltaColumn, los, his,
         else:
             words = out
         host_words = np.asarray(words)
-        _WORDS_POOL[(engine, n_words)] = words  # reuse next dispatch
+        _pool_words(engine, n_words, words)  # reuse 2 dispatches later
         return PAC.from_dense_bitmap(host_words, target_page_size)
     m = len(miss)
     m_pad = next_pow2(m)

@@ -196,16 +196,20 @@ def traversal_plan(adj, engine: str) -> TraversalPlan:
 
 def traversal_stats(adj) -> "Dict[str, object] | None":
     """Aggregated traversal counters across the adjacency's live plans
-    (for ``GraphRetriever.stats()`` / ``ServeEngine.stats()``)."""
+    (for ``GraphRetriever.stats()`` / ``ServeEngine.stats()``), plus the
+    graceful host-loop fallbacks taken while deltas were pending."""
     plans = getattr(adj, "_traversal_plans", None)
-    if not plans:
+    fallbacks = getattr(adj, "_traversal_fallbacks", 0)
+    if not plans and not fallbacks:
         return None
+    plans = plans or {}
     out = {"dispatches": sum(p.dispatches for p in plans.values()),
            "hops_fused": sum(p.hops_fused for p in plans.values()),
            "device_transfers": sum(p.device_transfers
                                    for p in plans.values()),
            "traversal_device_roundtrips": sum(p.device_roundtrips
-                                              for p in plans.values())}
+                                              for p in plans.values()),
+           "fallbacks": fallbacks}
     last = [p.last_frontier_sizes for p in plans.values()
             if p.last_frontier_sizes is not None]
     if last:
@@ -282,6 +286,12 @@ def _shard_width(parts) -> int:
     return g
 
 
+def note_traversal_fallback(adj) -> None:
+    """Count one graceful degradation to the host-loop oracle (surfaced
+    as ``fallbacks`` in :func:`traversal_stats`)."""
+    adj._traversal_fallbacks = getattr(adj, "_traversal_fallbacks", 0) + 1
+
+
 def k_hop_fused(adj, seeds, hops: int, filts: Sequence, meter=None,
                 engine: str = "jax",
                 include_seeds: bool = True) -> np.ndarray:
@@ -290,11 +300,17 @@ def k_hop_fused(adj, seeds, hops: int, filts: Sequence, meter=None,
     from repro.core.delta_segment import live_delta
     if live_delta(adj) is not None:
         # the traversal plan is built over the packed base only -- it
-        # cannot see pending delta rows.  ``k_hop`` routes to the host
-        # loop while the mutable plane has rows; a direct caller must not
-        # silently lose ingested edges.
-        raise ValueError("fused traversal cannot serve pending delta rows;"
-                         " compact first or use the host loop")
+        # cannot see pending delta rows.  Degrade gracefully to the
+        # bit-identical host-loop oracle (which unions the mutable plane
+        # per hop) instead of erroring mid-ingest: serving must never
+        # fail because a compaction has not folded the backlog yet.  The
+        # degradation is counted (``fallbacks``) but invisible in ids
+        # and IOMeter.
+        note_traversal_fallback(adj)
+        from repro.core.neighbor import k_hop
+        return k_hop(adj, seeds, hops, meter=meter, engine=engine,
+                     include_seeds=include_seeds, filter=list(filts),
+                     fused=False)
     col = _kernel_column(adj)
     plan = traversal_plan(adj, engine)
     n = plan.n_value

@@ -11,10 +11,40 @@ Retrieval-augmented requests name a ``context_vertex`` in the lake; the
 engine gathers context for **all** requests admitted in a tick via one
 batched neighbor retrieval (``context_fn``, e.g.
 :class:`repro.serve.retrieval.GraphRetriever`) before prefill.
+
+Pipelined serving (PR 8)
+------------------------
+
+Retrieval and decode are *independent* device programs, so a tick does
+not have to run them back to back.  With ``pipeline=True`` (the
+``REPRO_PIPELINE`` default) each tick becomes a two-stage pipeline::
+
+    admit(t)                  consume tick t's prefetched contexts,
+      |                       prefill admitted slots
+    dispatch decode(t)        jax async dispatch -- returns immediately
+      |
+    prefetch retrieval(t+1)   speculate next tick's admissions from the
+      |                       queue + deterministic retirements and run
+      |                       their batched retrieval (lake pages land in
+      |                       the decoded-page LRU) while decode executes
+    sample(t)                 first host read of the logits = the only
+                              sync point of the tick
+
+Speculation is *checked, not trusted*: the retrieval plane's state
+(meter, LRU, counters) is snapshotted before every prefetch, and if the
+next tick's actual admission batch differs -- a slot retired early on
+EOS, a request jumped the queue, or the graph mutated under the
+prediction -- the snapshot is restored and the tick falls back to the
+synchronous retrieval path.  Ids, tokens, and IOMeter are therefore
+**bit-identical** to the sequential engine on every tick, speculation
+hit or miss; the pipeline only moves wall time.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
+import os
+import time
 from collections import deque
 from typing import Callable, Dict, List, Optional
 
@@ -24,6 +54,39 @@ import numpy as np
 
 from repro.models.model import LM
 from .sampling import sample
+
+
+def _pipeline_default() -> bool:
+    """``REPRO_PIPELINE`` default (read at engine construction so tests
+    can flip it per engine): pipelined serving is on unless disabled."""
+    return os.environ.get("REPRO_PIPELINE", "1") \
+        .strip().lower() not in ("0", "false", "no", "off")
+
+
+#: model id -> jitted decode_step / prefill, shared across engine
+#: instances (the sequential oracle and the pipelined engine under test
+#: would otherwise each pay a full lowering+compile of the same program).
+_DECODE_JITS: Dict[int, Callable] = {}
+_PREFILL_JITS: Dict[int, Callable] = {}
+
+
+def _decode_jit(model: LM) -> Callable:
+    fn = _DECODE_JITS.get(id(model))
+    if fn is None:
+        fn = jax.jit(model.decode_step)
+        _DECODE_JITS[id(model)] = fn
+    return fn
+
+
+def _prefill_jit(model: LM) -> Callable:
+    # an eager prefill costs ~1000x the compiled program on the reduced
+    # test models and dominates every admission tick; compiled per
+    # prompt-length bucket (jit retraces on new shapes)
+    fn = _PREFILL_JITS.get(id(model))
+    if fn is None:
+        fn = jax.jit(model.prefill)
+        _PREFILL_JITS[id(model)] = fn
+    return fn
 
 
 @dataclasses.dataclass
@@ -43,8 +106,14 @@ class ServeEngine:
     def __init__(self, model: LM, params, max_slots: int = 4,
                  max_len: int = 512, eos_id: int = 2, seed: int = 0,
                  context_fn: Optional[
-                     Callable[[np.ndarray], List[np.ndarray]]] = None):
+                     Callable[[np.ndarray], List[np.ndarray]]] = None,
+                 pipeline: Optional[bool] = None, batched: bool = True):
         self.model = model
+        # ``batched=False`` keeps the pre-pipeline per-request tick
+        # (one prefill dispatch+sync per admitted request, one sample
+        # read per active slot) as the benchmark baseline the serving
+        # suite measures the restructured tick against
+        self.batched = bool(batched)
         self.params = params
         self.max_slots = max_slots
         self.max_len = max_len
@@ -58,8 +127,27 @@ class ServeEngine:
                                       dtype=jnp.float32, vector_index=True)
         self.slot_pos = np.zeros(max_slots, np.int32)   # python-side mirror
         self.rng = jax.random.PRNGKey(seed)
-        self._decode = jax.jit(model.decode_step)
+        self._decode = _decode_jit(model)
+        self._prefill_fn = _prefill_jit(model)
+        self._tmp_caches: Dict[int, object] = {}  # k -> prefill template
+        self._write_jit = jax.jit(self._write_slots)
         self.steps = 0
+        # -- pipelined serving state ------------------------------------------
+        self.pipeline = _pipeline_default() if pipeline is None \
+            else bool(pipeline)
+        # speculative prefetch needs to undo a wrong guess exactly: only
+        # a context_fn exposing snapshot/restore can be prefetched against
+        self._can_prefetch = (context_fn is not None
+                              and hasattr(context_fn, "snapshot")
+                              and hasattr(context_fn, "restore"))
+        self._prefetch: Optional[Dict[str, object]] = None
+        self.prefetch_issued = 0    # speculative retrievals launched
+        self.prefetch_hits = 0      # consumed by the predicted admission
+        self.mis_speculations = 0   # restored + synchronous fallback
+        self.pipeline_overlap_ms = 0.0  # prefetch time spent under decode
+        self.last_tick: Dict[str, float] = {}   # last tick's latency split
+        self.tick_totals: Dict[str, float] = {}  # cumulative latency split
+        self._last_retrieval_ms = 0.0
 
     # -- admission -------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -77,13 +165,62 @@ class ServeEngine:
             raise ValueError("no ingest-capable context_fn attached")
         return self.context_fn.ingest(src, dst)
 
+    def _clamp_admission(self, req: Request) -> None:
+        """``max_len`` is the slot's hard cache-row budget: prompt rows
+        plus decode writes must fit.  A request admitted near capacity
+        (long prompt, or ``max_new_tokens`` past the remaining rows)
+        would otherwise write past the cache -- clamp both at admission,
+        before the context budget is computed from them."""
+        prompt = np.asarray(req.prompt, np.int32)
+        cap = self.max_len - 2          # leave >= 1 decode row
+        if len(prompt) > cap:
+            req.prompt = prompt[:cap]
+        room = self.max_len - 1 - len(req.prompt)
+        if req.max_new_tokens > room:
+            req.max_new_tokens = int(room)
+
+    def _graph_epoch(self):
+        fn = getattr(self.context_fn, "mutation_epoch", None)
+        return fn() if fn is not None else None
+
+    def _discard_prefetch(self) -> None:
+        """A prefetched retrieval that cannot be consumed: rewind the
+        retrieval plane to its pre-prefetch state (meter, LRU, counters)
+        so the synchronous path replays from exactly where the
+        sequential engine would stand."""
+        pf = self._prefetch
+        self._prefetch = None
+        if pf is not None:
+            self.mis_speculations += 1
+            self.context_fn.restore(pf["snapshot"])
+
+    def _take_prefetch(self, vs: np.ndarray) -> Optional[List[np.ndarray]]:
+        """Prefetched contexts for exactly this admission batch, or None
+        (after restoring) when the speculation missed."""
+        pf = self._prefetch
+        if pf is None:
+            return None
+        self._prefetch = None
+        if np.array_equal(pf["vs"], vs) \
+                and self._graph_epoch() == pf["epoch"]:
+            self.prefetch_hits += 1
+            return pf["contexts"]
+        self.mis_speculations += 1
+        self.context_fn.restore(pf["snapshot"])
+        return None
+
     def _attach_context(self, admitted: List[Request]) -> None:
-        """One batched lake retrieval for every admitted request's seed."""
+        """One batched lake retrieval for every admitted request's seed
+        (served from the previous tick's prefetch when the speculation
+        predicted this exact batch)."""
         need = [r for r in admitted if r.context_vertex is not None]
         if not need or self.context_fn is None:
+            self._discard_prefetch()
             return
-        contexts = self.context_fn(
-            np.asarray([r.context_vertex for r in need], np.int64))
+        vs = np.asarray([r.context_vertex for r in need], np.int64)
+        contexts = self._take_prefetch(vs)
+        if contexts is None:
+            contexts = self.context_fn(vs)
         for req, ctx in zip(need, contexts):
             ctx = np.asarray(ctx, np.int32)
             # leave room for generation within the slot's cache rows
@@ -99,47 +236,132 @@ class ServeEngine:
         admitted: List[tuple] = []
         while free and self.queue:
             admitted.append((free.pop(0), self.queue.popleft()))
+        for _, req in admitted:
+            self._clamp_admission(req)
+        t0 = time.perf_counter()
         self._attach_context([r for _, r in admitted])
+        self._last_retrieval_ms = (time.perf_counter() - t0) * 1e3
+        # grouped prefill: all admitted prompts of one length run as ONE
+        # batched forward + one vectorized multi-slot cache write, instead
+        # of per-request dispatch/sync round-trips (the admission stage
+        # was the tick's fixed-cost floor before the pipeline can help)
+        if self.batched:
+            groups: Dict[int, List[tuple]] = {}
+            for slot, req in admitted:
+                groups.setdefault(len(req.prompt), []).append((slot, req))
+            grouped = list(groups.values())
+        else:
+            grouped = [[(slot, req)] for slot, req in admitted]
+        for grp in grouped:
+            self._prefill_group(grp)
         for slot, req in admitted:
-            self._prefill_slot(slot, req)
             self.slots[slot] = req
 
-    def _prefill_slot(self, slot: int, req: Request) -> None:
-        """Per-slot prefill: runs the prompt through the model and writes
-        this slot's cache rows (batch-1 prefill into a batched cache)."""
-        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        tmp_cache = self.model.init_cache(1, self.max_len,
-                                          dtype=jnp.float32)
-        logits, tmp_cache = self.model.prefill(
-            self.params, {"tokens": prompt}, tmp_cache)
-
-        ms = self.max_slots
+    def _write_slots(self, cache, tmp_cache, slots):
+        """One fused program writing a batch-k prefill cache's rows into
+        the engine cache's ``slots`` rows (jitted: the eager per-leaf
+        ``.at[].set`` dispatches were most of the admission cost).
+        ``tmp_cache`` row j lands in engine slot ``slots[j]``."""
+        ms, k = self.max_slots, len(slots)
 
         def write(slot_arr, one_arr):
-            # same rank: batch axis carries size 1 (tmp) vs max_slots
             if one_arr.ndim == slot_arr.ndim:
-                if one_arr.ndim >= 1 and one_arr.shape[0] == 1 \
+                # scan-stacked leaves: (n_units, batch, ...) -- requires
+                # the leading (unit) axis to agree, so it cannot misfire
+                # on a plain batch-leading leaf
+                if one_arr.ndim >= 2 and one_arr.shape[1] == k \
+                        and slot_arr.shape[1] == ms \
+                        and slot_arr.shape[0] == one_arr.shape[0]:
+                    return slot_arr.at[:, slots].set(one_arr)
+                # batch-leading leaves: (k, ...) vs (max_slots, ...)
+                if one_arr.ndim >= 1 and one_arr.shape[0] == k \
                         and slot_arr.shape[0] == ms:
-                    return slot_arr.at[slot].set(one_arr[0])
-                if one_arr.ndim >= 2 and one_arr.shape[1] == 1 \
-                        and slot_arr.shape[1] == ms:  # scan-stacked leaves
-                    return slot_arr.at[:, slot].set(one_arr[:, 0])
+                    return slot_arr.at[slots].set(one_arr)
                 return slot_arr
-            # scalar index (tmp) -> per-slot vector index (engine)
+            # shared scalar index (tmp) -> per-slot vector index
+            # (engine); one prefill group = one prompt length, so the
+            # scalar broadcasts to every written slot
             if one_arr.ndim + 1 == slot_arr.ndim:
                 if slot_arr.ndim == 1:
-                    return slot_arr.at[slot].set(one_arr)
+                    return slot_arr.at[slots].set(one_arr)
                 if slot_arr.ndim >= 2 and slot_arr.shape[1] == ms \
                         and slot_arr.shape[0] == one_arr.shape[0]:
-                    return slot_arr.at[:, slot].set(one_arr)
+                    return slot_arr.at[:, slots].set(one_arr[:, None])
             return slot_arr
 
-        self.cache = jax.tree.map(write, self.cache, tmp_cache)
-        self.slot_pos[slot] = len(req.prompt)
-        tok = int(jnp.argmax(logits[0, -1]))
-        req.output.append(tok)
-        if tok == self.eos_id:
-            req.done = True
+        return jax.tree.map(write, cache, tmp_cache)
+
+    def _prefill_group(self, grp: List[tuple]) -> None:
+        """Batched prefill of same-length prompts: one forward over the
+        stacked ``(k, L)`` prompt matrix, one multi-slot cache write, one
+        host sync for the k argmax tokens."""
+        k = len(grp)
+        prompts = np.stack([np.asarray(req.prompt, np.int32)
+                            for _, req in grp])
+        # the empty batch-k cache is a constant per engine: build once
+        # per k and reuse (jax arrays are immutable; prefill returns new
+        # leaves)
+        tmpl = self._tmp_caches.get(k)
+        if tmpl is None:
+            tmpl = self.model.init_cache(k, self.max_len,
+                                         dtype=jnp.float32)
+            self._tmp_caches[k] = tmpl
+        logits, tmp_cache = self._prefill_fn(
+            self.params, {"tokens": jnp.asarray(prompts)}, tmpl)
+        self.cache = self._write_jit(
+            self.cache, tmp_cache,
+            jnp.asarray([s for s, _ in grp], jnp.int32))
+        toks = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        for (slot, req), tok in zip(grp, toks):
+            self.slot_pos[slot] = len(req.prompt)
+            req.output.append(int(tok))
+            # the prefill token counts toward the budget:
+            # max_new_tokens=1 (e.g. a clamped near-capacity admission)
+            # retires right here
+            if int(tok) == self.eos_id or \
+                    len(req.output) >= req.max_new_tokens:
+                req.done = True
+
+    # -- speculative prefetch (the pipeline's second stage) --------------------
+    def _predict_retiring(self, active: List[int]) -> int:
+        """Slots certain to retire this tick, *before* sampling: the
+        length/position bounds are deterministic; only EOS is not (a
+        wrong guess is caught and rolled back at the next admission)."""
+        n = 0
+        for i in active:
+            req = self.slots[i]
+            if len(req.output) + 1 >= req.max_new_tokens or \
+                    int(self.slot_pos[i]) + 1 >= self.max_len - 1:
+                n += 1
+        return n
+
+    def _speculate_prefetch(self, active: List[int]) -> None:
+        """Issue tick t+1's batched retrieval while tick t's decode is in
+        flight.  The predicted admission batch is the queue's head, as
+        wide as the slots certain to free; the retrieval runs through the
+        real plane (pages land in the decoded-page LRU, the meter is
+        charged miss-only -- exactly what the synchronous path would do
+        one tick later), guarded by a snapshot for the fallback."""
+        if self._prefetch is not None or not self._can_prefetch \
+                or not self.queue:
+            return
+        # certain frees: empty slots, slots already done (EOS at
+        # prefill, retired at tick end), and deterministic retirements
+        width = sum(1 for s in self.slots if s is None or s.done) \
+            + self._predict_retiring(active)
+        if width <= 0:
+            return
+        admits = list(itertools.islice(self.queue, 0, width))
+        vs = np.asarray([r.context_vertex for r in admits
+                         if r.context_vertex is not None], np.int64)
+        if vs.size == 0:
+            return
+        snapshot = self.context_fn.snapshot()
+        epoch = self._graph_epoch()
+        contexts = self.context_fn(vs)
+        self.prefetch_issued += 1
+        self._prefetch = {"vs": vs, "contexts": contexts,
+                          "snapshot": snapshot, "epoch": epoch}
 
     # -- decode tick -------------------------------------------------------------
     def _active(self) -> List[int]:
@@ -147,8 +369,14 @@ class ServeEngine:
                 if r is not None and not r.done]
 
     def step(self) -> int:
-        """One engine tick: admit + one batched decode. Returns #active."""
+        """One engine tick: admit + one batched decode. Returns #active.
+
+        Pipelined mode dispatches the decode, runs the speculative
+        prefetch in the decode's shadow, and only then samples (the
+        logits read is the tick's one host sync)."""
+        t0 = time.perf_counter()
         self._admit()
+        t_admit = time.perf_counter()
         active = self._active()
         if not active:
             self._retire()
@@ -158,19 +386,48 @@ class ServeEngine:
             tokens[i, 0] = self.slots[i].output[-1]
         logits, self.cache = self._decode(self.params,
                                           jnp.asarray(tokens), self.cache)
+        t_dispatch = time.perf_counter()
         self.steps += 1
+        if self.pipeline:
+            self._speculate_prefetch(active)
+        t_prefetch = time.perf_counter()
         self.rng, sub = jax.random.split(self.rng)
+        # greedy slots sample as ONE batched argmax + host read (row-wise
+        # argmax is independent per row, so batching is bit-identical);
+        # temperature>0 slots keep the per-slot draw -- a batched
+        # categorical would change each row's stream under the shared key
+        tok_of: Dict[int, int] = {}
+        greedy = [i for i in active if self.slots[i].temperature <= 0.0] \
+            if self.batched else []
+        if greedy:
+            toks = np.asarray(sample(sub, logits[jnp.asarray(greedy), 0]))
+            tok_of.update((i, int(t)) for i, t in zip(greedy, toks))
         for i in active:
             req = self.slots[i]
-            temp = req.temperature
-            tok = int(sample(sub, logits[i:i + 1, 0], temperature=temp)[0])
+            tok = tok_of.get(i)
+            if tok is None:
+                tok = int(sample(sub, logits[i:i + 1, 0],
+                                 temperature=req.temperature)[0])
             req.output.append(tok)
             self.slot_pos[i] += 1
             if tok == self.eos_id or \
                     len(req.output) >= req.max_new_tokens or \
                     int(self.slot_pos[i]) >= self.max_len - 1:
                 req.done = True
+        t_sample = time.perf_counter()
         self._retire()
+        overlap = (t_prefetch - t_dispatch) * 1e3
+        self.pipeline_overlap_ms += overlap
+        self.last_tick = {
+            "admit_ms": (t_admit - t0) * 1e3,
+            "retrieval_ms": self._last_retrieval_ms,
+            "dispatch_ms": (t_dispatch - t_admit) * 1e3,
+            "prefetch_ms": overlap,
+            "decode_sample_ms": (t_sample - t_prefetch) * 1e3,
+            "tick_ms": (t_sample - t0) * 1e3,
+        }
+        for k, v in self.last_tick.items():
+            self.tick_totals[k] = self.tick_totals.get(k, 0.0) + v
         return len(self._active())
 
     def _retire(self) -> None:
@@ -185,12 +442,24 @@ class ServeEngine:
         batching and decoded-page cache hit/miss counters when the
         context_fn exposes them (e.g. :class:`GraphRetriever`) -- the
         observable signal that warm-tick serving stops re-paying decode
-        and lake I/O for hot pages."""
+        and lake I/O for hot pages -- plus the pipeline's speculation
+        counters and per-tick latency breakdown."""
         s: Dict[str, object] = {
             "steps": self.steps,
             "finished": len(self.finished),
             "queued": len(self.queue),
             "active": len(self._active()),
+        }
+        s["pipeline"] = {
+            "enabled": self.pipeline,
+            "prefetch_issued": self.prefetch_issued,
+            "prefetch_hits": self.prefetch_hits,
+            "mis_speculations": self.mis_speculations,
+            "pipeline_overlap_ms": round(self.pipeline_overlap_ms, 3),
+            "last_tick": {k: round(v, 3)
+                          for k, v in self.last_tick.items()},
+            "totals": {k: round(v, 3)
+                       for k, v in self.tick_totals.items()},
         }
         if self.context_fn is not None and hasattr(self.context_fn, "stats"):
             s["retrieval"] = self.context_fn.stats()

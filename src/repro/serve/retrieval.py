@@ -21,7 +21,7 @@ Two cross-tick layers ride on top (PR 2):
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -190,6 +190,56 @@ class GraphRetriever:
             out.append(np.concatenate(parts) if parts
                        else np.zeros(0, np.int32))
         return out
+
+    # -- speculative prefetch support (pipelined serving, PR 8) ---------------
+    def snapshot(self) -> Dict[str, object]:
+        """Point-in-time state of everything a retrieval call mutates:
+        the IOMeter, the decoded-page LRU (contents *and* recency order),
+        and this retriever's counters.  The pipelined engine snapshots
+        before every speculative prefetch; a mis-speculation restores and
+        replays the synchronous path, so meter and cache evolve exactly
+        as the sequential engine's would -- bit-identical accounting is a
+        property of the rollback, not of the prediction."""
+        state: Dict[str, object] = {
+            "calls": self.calls, "vertices_seen": self.vertices_seen,
+            "filter_considered": self.filter_considered,
+            "filter_kept": self.filter_kept,
+            "filter_charged": self._filter_charged,
+            "deep_pool_last": self.deep_pool_last,
+        }
+        if self.meter is not None:
+            state["meter"] = (self.meter.nbytes, self.meter.nrequests)
+        cache = self.page_cache
+        if cache is not None:
+            state["cache"] = cache.snapshot()
+        return state
+
+    def restore(self, state: Dict[str, object]) -> None:
+        """Rewind to a :meth:`snapshot` (undo one speculative call)."""
+        self.calls = state["calls"]
+        self.vertices_seen = state["vertices_seen"]
+        self.filter_considered = state["filter_considered"]
+        self.filter_kept = state["filter_kept"]
+        self._filter_charged = state["filter_charged"]
+        self.deep_pool_last = state["deep_pool_last"]
+        if self.meter is not None and "meter" in state:
+            self.meter.nbytes, self.meter.nrequests = state["meter"]
+        cache = self.page_cache
+        if cache is not None and "cache" in state:
+            cache.restore(state["cache"])
+
+    def mutation_epoch(self) -> Tuple[int, int, int]:
+        """Graph-state fingerprint a prefetched retrieval is only valid
+        under: the adjacency column's write version, the mutable plane's
+        pending row count, and the ingests routed through this retriever.
+        Any movement between prefetch and consumption means the
+        speculative contexts could be stale -- the engine falls back."""
+        from repro.core.delta_segment import live_delta
+        version = (self._cache_col.encoded.version
+                   if self._cache_col is not None else 0)
+        delta = live_delta(self.adj)
+        pending = delta.pending_rows() if delta is not None else 0
+        return (version, pending, self.ingest_calls)
 
     def ingest(self, src, dst):
         """Ingest an edge batch into the adjacency's mutable plane.

@@ -115,16 +115,24 @@ def test_k_hop_union_matches_rebuild(engine):
         np.testing.assert_array_equal(got, want)
 
 
-def test_fused_traversal_refuses_pending_deltas():
-    from repro.kernels.traversal.ops import k_hop_fused, plan_supported
+def test_fused_traversal_degrades_on_pending_deltas():
+    """A direct fused-traversal call under pending deltas must not
+    error mid-ingest: it degrades to the bit-identical host-loop oracle
+    and counts the fallback in the traversal stats."""
+    from repro.kernels.traversal.ops import k_hop_fused, plan_supported, \
+        traversal_stats
     rng = np.random.default_rng(2)
     adj = build_adjacency(rng.integers(0, N, 2000),
                           rng.integers(0, N, 2000), N, N, BY_SRC,
                           ENC_GRAPHAR, page_size=PAGE)
     assert plan_supported(adj)
     ingest_edges(adj, [1], [2])
-    with pytest.raises(ValueError, match="pending delta"):
-        k_hop_fused(adj, np.arange(4), 2, [None, None], engine="jax")
+    got = k_hop_fused(adj, np.arange(4), 2, [None, None], engine="jax")
+    oracle = build_adjacency(*all_edges(adj), N, N, BY_SRC, ENC_GRAPHAR,
+                             page_size=PAGE)
+    np.testing.assert_array_equal(
+        got, k_hop(oracle, np.arange(4), 2, engine="numpy"))
+    assert traversal_stats(adj)["fallbacks"] >= 1
 
 
 # --------------------- accounting under pending writes -------------------
