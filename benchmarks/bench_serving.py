@@ -43,7 +43,9 @@ from repro.core import (BY_SRC, EdgeTypeSchema, GraphArBuilder, IOMeter,
                         PropertySchema, VertexTypeSchema)
 from repro.data.synthetic import document_graph
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.overload import OverloadConfig
 from repro.serve.retrieval import GraphRetriever
+from repro.serve.tenancy import RequestStatus, TenantConfig
 
 from .util import emit
 
@@ -222,3 +224,173 @@ def run() -> None:
          f"pipelined_vs_baseline={sat['pipe'] / sat['baseline']:.2f}x "
          f"overlap_vs_seq={sat['pipe'] / sat['seq']:.2f}x "
          f"at_lam={LAMS[-1]}")
+
+
+# ------------------- admission & overload (PR 9) --------------------------
+#
+# Open-loop offered load at 1x/2x/4x the service capacity (CAP requests
+# per tick sustained by SLOTS slots retiring every ~MNT ticks), two
+# tenant classes (latency-sensitive ``prod`` weight 8, ``batch`` weight 1
+# with a deadline), crossed with {no admission, admission+shedding}.
+# The acceptance contrast: under 4x overload the admission engine keeps
+# queue depth bounded by the configured per-tenant queue caps while the
+# no-admission baseline's backlog grows without bound; prod keeps its
+# sojourn p99 flat because DWRR weight + rate caps shield it from batch
+# floods.  A final row drives the overload ladder (impossibly low
+# latency target) and asserts serving continues, degraded, retrace-free.
+
+OV_TICKS = 30 if SMOKE else 80
+CAP = max(1, SLOTS // MNT)          # sustainable arrivals per tick
+MULTS = (1, 2, 4)
+BATCH_DEADLINE = 3 * MNT
+
+
+def _ov_tenants():
+    return [TenantConfig("prod", weight=8, rate=0.75 * CAP,
+                         burst=float(SLOTS), max_queue=2 * SLOTS),
+            TenantConfig("batch", weight=1, rate=0.5 * CAP,
+                         burst=float(SLOTS), max_queue=SLOTS,
+                         deadline_ticks=BATCH_DEADLINE)]
+
+
+def _ov_requests(cfg, seeds, n):
+    rng = np.random.default_rng(2)
+    vs = seeds[rng.integers(0, len(seeds), n)]
+    out = []
+    for i, v in enumerate(vs):
+        r = Request(i, rng.integers(4, cfg.vocab_size, size=P0)
+                    .astype(np.int32),
+                    max_new_tokens=2 + (i % MNT) if i < SLOTS else MNT,
+                    context_vertex=int(v))
+        r.tenant = "prod" if i % 2 == 0 else "batch"
+        out.append(r)
+    return out
+
+
+def _ov_engine(model, params, adj, tok, admit, overload=None):
+    retr = GraphRetriever(adj, tok, max_neighbors=NB,
+                          tokens_per_neighbor=TPN, meter=IOMeter(),
+                          engine=RETR_ENGINES[0],
+                          page_cache_pages=CACHE_PAGES)
+    if retr.page_cache is not None:
+        retr.page_cache.clear()
+        retr.page_cache.reset_stats()
+    return ServeEngine(model, params, max_slots=SLOTS, max_len=MAX_LEN,
+                       eos_id=-1, context_fn=retr, pipeline=True,
+                       tenants=_ov_tenants() if admit else None,
+                       overload=overload)
+
+
+def _ov_run(eng, cfg, seeds, mult, ticks, drain=True):
+    """Offer ``mult * CAP`` arrivals per tick for ``ticks`` ticks, then
+    (optionally) drain.  Returns per-tick queue depth, per-tick latency
+    (ms), and the submit outcomes."""
+    reqs = iter(_ov_requests(cfg, seeds, mult * CAP * ticks))
+    depth, lat, outcomes = [], [], []
+    for _ in range(ticks):
+        for _ in range(mult * CAP):
+            r = next(reqs, None)
+            if r is not None:
+                outcomes.append(eng.submit(r))
+        t0 = time.perf_counter()
+        eng.step()
+        lat.append((time.perf_counter() - t0) * 1e3)
+        depth.append(eng.stats()["queued"])
+    if drain:
+        eng.run_until_drained(max_ticks=50_000)
+    return np.asarray(depth), np.asarray(lat), outcomes
+
+
+def _sojourn(eng, tenant):
+    """Per-class sojourn (submit -> retire, in ticks) over OK finishes."""
+    ts = [r.finished_tick - r.submitted_tick for r in eng.finished
+          if r.tenant == tenant and r.status in (None, RequestStatus.OK)
+          and r.finished_tick is not None and r.submitted_tick is not None]
+    if not ts:
+        return float("nan"), float("nan")
+    a = np.asarray(ts, float)
+    return float(np.percentile(a, 50)), float(np.percentile(a, 99))
+
+
+def run_overload() -> None:
+    from repro.configs import get_config
+    from repro.kernels._pad import trace_count
+    from repro.models import build_model
+    cfg = get_config("smollm-360m").reduced().with_(n_units=2)
+    model = build_model(cfg)
+    params = model.init(0)
+    adj, tok = _lake()
+    seeds = _fixed_len_seeds(adj, tok)
+    hard_bound = sum(t.max_queue for t in _ov_tenants())
+
+    peak_depth = {}
+    for mult in MULTS:
+        for admit in (False, True):
+            mode = "admit" if admit else "noadmit"
+            # warm pass: compile every admission shape this load offers
+            warm = _ov_engine(model, params, adj, tok, admit)
+            _ov_run(warm, cfg, seeds, mult, OV_TICKS, drain=False)
+            eng = _ov_engine(model, params, adj, tok, admit)
+            depth, lat, outcomes = _ov_run(eng, cfg, seeds, mult, OV_TICKS)
+            s = eng.stats()
+            rejected = s.get("rejected", 0)
+            expired = (s.get("deadline_exceeded", 0) or 0)
+            pp50, pp99 = _sojourn(eng, "prod")
+            bp50, bp99 = _sojourn(eng, "batch")
+            submitted = len(outcomes)
+            finished = len(eng.finished)
+            # exactly-one-bucket accounting: every offered request either
+            # finished (OK or deadline) or was shed with a typed outcome
+            assert finished + rejected == submitted, \
+                f"{mode} x{mult}: {finished}+{rejected} != {submitted}"
+            if admit:
+                assert depth.max() <= hard_bound, \
+                    f"admission queue depth {depth.max()} > {hard_bound}"
+            peak_depth[(mode, mult)] = int(depth.max())
+            emit(f"overload_{mode}_x{mult}",
+                 float(np.percentile(lat, 99)) * 1e3,
+                 f"prod_sojourn_p50={pp50:.0f} prod_p99={pp99:.0f} "
+                 f"batch_p50={bp50:.0f} batch_p99={bp99:.0f} "
+                 f"depth_max={depth.max()} depth_end={depth[-1]} "
+                 f"rejected={rejected} expired={expired} "
+                 f"finished={finished}/{submitted}")
+
+    # the acceptance contrast at 4x: bounded vs unbounded backlog
+    assert peak_depth[("admit", 4)] <= hard_bound
+    assert peak_depth[("noadmit", 4)] > peak_depth[("admit", 4)], \
+        "no-admission baseline failed to out-queue the admission engine"
+    emit("overload_bounded_vs_unbounded", float(peak_depth[("noadmit", 4)]),
+         f"noadmit_depth={peak_depth[('noadmit', 4)]} "
+         f"admit_depth={peak_depth[('admit', 4)]} bound={hard_bound} at_x4")
+
+    # degradation ladder under sustained overload: an unreachable latency
+    # target forces every rung; serving must keep ticking, stay accurate
+    # in its accounting, and hold steady state retrace-free
+    ov = OverloadConfig(target_p99_ms=1e-6, window=4, patience=1)
+    warm = _ov_engine(model, params, adj, tok, True, overload=ov)
+    _ov_run(warm, cfg, seeds, 4, OV_TICKS, drain=False)
+    eng = _ov_engine(model, params, adj, tok, True, overload=ov)
+    reqs = iter(_ov_requests(cfg, seeds, 4 * CAP * OV_TICKS))
+    for _ in range(OV_TICKS // 3):      # ladder engages in the first third
+        for _ in range(4 * CAP):
+            r = next(reqs, None)
+            if r is not None:
+                eng.submit(r)
+        eng.step()
+    t_before = trace_count()
+    for _ in range(OV_TICKS - OV_TICKS // 3):
+        for _ in range(4 * CAP):
+            r = next(reqs, None)
+            if r is not None:
+                eng.submit(r)
+        eng.step()
+    retraces = trace_count() - t_before
+    eng.run_until_drained(max_ticks=50_000)
+    ostats = eng.stats()["overload"]
+    assert ostats["level"] == 3, f"ladder never fully engaged: {ostats}"
+    assert eng.finished, "degraded engine stopped serving"
+    assert retraces == 0, f"degraded steady state retraced {retraces}x"
+    emit("overload_ladder", float(ostats["degrade_steps"]),
+         f"level={ostats['level']} degrade={ostats['degrade_steps']} "
+         f"restore={ostats['restore_steps']} retraces={retraces} "
+         f"finished={len(eng.finished)}")

@@ -39,6 +39,7 @@ SUITES = {
     "pipeline": bench_pipeline.run,
     "kernels": bench_kernels.run,
     "serving": bench_serving.run,
+    "overload": bench_serving.run_overload,
 }
 
 
@@ -48,13 +49,13 @@ def main() -> None:
                     help="comma-separated suite names")
     ap.add_argument("--json", default=None,
                     help="machine-readable results path ('' to skip); "
-                         "defaults to BENCH_PR8.json, or bench_smoke.json "
+                         "defaults to BENCH_PR9.json, or bench_smoke.json "
                          "under REPRO_BENCH_SMOKE so shrunk-workload rows "
                          "never overwrite the tracked trajectory")
     args = ap.parse_args()
     if args.json is None:
         args.json = ("bench_smoke.json" if os.environ.get("REPRO_BENCH_SMOKE")
-                     else "BENCH_PR8.json")
+                     else "BENCH_PR9.json")
     names = (args.only.split(",") if args.only else list(SUITES))
     header()
     t0 = time.perf_counter()

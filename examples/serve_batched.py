@@ -11,6 +11,12 @@ context; the predicate bitmap is evaluated once by the filtering plane and
 cached across ticks, and `ServeEngine.stats()` surfaces both the
 decoded-page LRU counters and the filter's considered/kept counters.
 
+Admission is **multi-tenant** (PR 9): a latency-sensitive `prod` class
+and a rate-limited, deadline-bearing `batch` class share the slot pool
+under deficit-weighted round-robin; oversubmitting `batch` draws typed
+rejections with `retry_after` hints instead of an unbounded queue, and
+`stats()["tenants"]` breaks admission/fairness down per tenant.
+
 Run:  PYTHONPATH=src python examples/serve_batched.py
 """
 import numpy as np
@@ -22,6 +28,7 @@ from repro.data.synthetic import document_graph
 from repro.models import build_model
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.retrieval import GraphRetriever
+from repro.serve.tenancy import TenantConfig
 
 
 def main():
@@ -49,15 +56,26 @@ def main():
                                filter_vt=graph.vertex("doc"),
                                filter_cond=L("HighQuality") & ~L("Spam"))
     eng = ServeEngine(model, params, max_slots=4, max_len=256, eos_id=-1,
-                      context_fn=retriever)
+                      context_fn=retriever,
+                      tenants=[TenantConfig("prod", weight=4, max_queue=16),
+                               TenantConfig("batch", weight=1, rate=0.5,
+                                            burst=4.0, max_queue=4,
+                                            deadline_ticks=64)])
 
     # -- requests: prompt = seed doc; labeled neighbor passages per tick -----
+    # prod submits 8; batch floods 12 against a rate of 0.5 req/tick with
+    # burst 4 -- the excess is shed with typed retry_after hints
     rng = np.random.default_rng(0)
-    for rid in range(8):
+    shed = []
+    for rid in range(20):
         doc = int(rng.integers(0, lake.num_docs))
         prompt = tokens_col.get(doc)[:24].astype(np.int32)
-        eng.submit(Request(rid, prompt, max_new_tokens=12,
-                           temperature=0.0, context_vertex=doc))
+        req = Request(rid, prompt, max_new_tokens=12,
+                      temperature=0.0, context_vertex=doc)
+        req.tenant = "prod" if rid < 8 else "batch"
+        out = eng.submit(req)
+        if not out.admitted:
+            shed.append(out)
 
     finished = eng.run_until_drained(max_ticks=500)
     ctx = sum(r.context_tokens for r in finished)
@@ -71,6 +89,14 @@ def main():
     stats = eng.stats()["retrieval"]
     print("page cache:", stats["page_cache"])
     print("label filter:", stats["filter"])
+    # multi-tenant admission: the batch flood was shed, prod untouched
+    print(f"shed {len(shed)} batch requests "
+          f"(reasons: {sorted({o.reason.value for o in shed})}, "
+          f"retry_after hints: {sorted({o.retry_after for o in shed})})")
+    for name, t in eng.stats()["tenants"].items():
+        print(f"tenant {name}: weight={t['weight']} "
+              f"admitted={t['admitted']}/{t['submitted']} "
+              f"ok={t['finished_ok']} expired={t['expired']}")
 
 
 if __name__ == "__main__":

@@ -11,7 +11,10 @@ consumes one implementation instead of growing its own:
   injectable ``sleep`` so simulated components never block a test;
 * :class:`HeartbeatTracker` -- last-beat bookkeeping + timeout expiry;
 * :class:`StrikeCounter` -- N-strikes-and-out accumulator (straggler
-  eviction, poisoned-mirror demotion, any "repeated offender" policy).
+  eviction, poisoned-mirror demotion, any "repeated offender" policy);
+* :class:`TokenBucket` -- rate/burst admission bucket on an injectable
+  clock (the serving plane's per-tenant backpressure; deterministic
+  under the engine's tick counter, no wall-clock reads).
 """
 from __future__ import annotations
 
@@ -114,6 +117,47 @@ class HeartbeatTracker:
     def expired(self, now: Optional[float] = None) -> list:
         now = self.clock() if now is None else now
         return [m for m, t in self._last.items() if now - t > self.timeout]
+
+
+class TokenBucket:
+    """Rate/burst token bucket over an *explicit* clock.
+
+    Every operation takes ``now`` (any monotone number -- the serving
+    plane passes its tick counter), so a bucket's behavior is a pure
+    function of the (config, operation sequence) pair: replaying the
+    same submits at the same ticks yields the same admit/reject
+    decisions and the same retry hints.  No wall-clock reads anywhere.
+
+    ``try_take(now)`` refills ``rate * elapsed`` (capped at ``burst``)
+    and either takes ``cost`` tokens or reports how long until the
+    refill covers the deficit -- the caller's typed retry-after.
+    """
+
+    def __init__(self, rate: float, burst: float, now: float = 0.0):
+        if rate < 0 or burst <= 0:
+            raise ValueError("want rate >= 0 and burst > 0")
+        self.rate = float(rate)
+        self.burst = float(burst)
+        self.level = float(burst)     # a fresh bucket is full
+        self.last = float(now)
+
+    def refill(self, now: float) -> None:
+        if now > self.last:
+            self.level = min(self.burst,
+                             self.level + (now - self.last) * self.rate)
+            self.last = now
+
+    def try_take(self, now: float, cost: float = 1.0) -> Tuple[bool, float]:
+        """``(True, 0.0)`` when ``cost`` tokens were taken; otherwise
+        ``(False, wait)`` with ``wait`` = time until the refill covers
+        the deficit (``inf`` for a zero-rate bucket)."""
+        self.refill(now)
+        if self.level + 1e-9 >= cost:
+            self.level -= cost
+            return True, 0.0
+        deficit = cost - self.level
+        wait = deficit / self.rate if self.rate > 0 else float("inf")
+        return False, wait
 
 
 class StrikeCounter:

@@ -23,9 +23,34 @@ Boundaries (the write path's crash points):
 * ``store.write``        -- mid table write (the temp file is torn, the
                             destination untouched).
 
+Serving-plane boundaries (PR 9) -- the engine's per-tick crash points,
+checked by :class:`~repro.serve.engine.ServeEngine` when a plan is
+attached.  The serving chaos invariant rides on them: under any
+boundary x seed, every admitted request either finishes bit-identical
+to an unthrottled sequential oracle or carries a typed failure status,
+and the engine keeps ticking:
+
+* ``serve.retrieval``    -- around the tick's batched context retrieval
+                            (pre-dispatch and at commit; a commit-side
+                            fault rewinds the retrieval plane's snapshot
+                            before the retry so meter/LRU accounting
+                            replays exactly once);
+* ``serve.prefill``      -- around the grouped admission prefill (the
+                            forward is pure, so a retry recomputes the
+                            same logits/cache rows);
+* ``serve.spec_commit``  -- at the speculative prefetch's commit point
+                            (a fault restores the snapshot and degrades
+                            that tick to the synchronous path -- the
+                            speculation is optional work, never retried);
+* ``serve.ingest``       -- before an ingest-during-serve batch is
+                            forwarded to the mutable plane (the delta
+                            plane's own ``ingest.append`` boundary keeps
+                            the batch all-or-nothing under retry).
+
 ``REPRO_FAULT_SEED`` seeds :meth:`FaultPlan.from_env` -- the CI
 fault-injection matrix runs the ingest/compaction suites under several
-seeds, each deriving a different trip pattern over these boundaries.
+seeds, each deriving a different trip pattern over these boundaries;
+the serving-chaos matrix does the same over ``SERVE_BOUNDARIES``.
 """
 from __future__ import annotations
 
@@ -44,6 +69,16 @@ BOUNDARIES = (
     "compact.mid_gc",
     "store.write",
 )
+
+#: serving-plane boundaries (PR 9): the engine's per-tick crash points.
+SERVE_BOUNDARIES = (
+    "serve.retrieval",
+    "serve.prefill",
+    "serve.spec_commit",
+    "serve.ingest",
+)
+
+ALL_BOUNDARIES = BOUNDARIES + SERVE_BOUNDARIES
 
 
 class InjectedFault(RuntimeError):

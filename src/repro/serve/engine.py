@@ -38,6 +38,32 @@ prediction -- the snapshot is restored and the tick falls back to the
 synchronous retrieval path.  Ids, tokens, and IOMeter are therefore
 **bit-identical** to the sequential engine on every tick, speculation
 hit or miss; the pipeline only moves wall time.
+
+Admission-controlled multi-tenant serving (PR 9)
+------------------------------------------------
+
+With ``tenants=[TenantConfig(...), ...]`` the unbounded FIFO becomes a
+:class:`~repro.serve.tenancy.TenantScheduler`: ``submit`` gates each
+request through its tenant's token bucket and bounded queue and returns
+a typed :class:`~repro.serve.tenancy.SubmitOutcome` (``ADMITTED``, or
+``REJECTED`` with a retry-after computed from the bucket refill), and
+free slots are filled by deficit-weighted round-robin so no tenant
+starves while idle tenants donate their share.  Per-request deadlines
+(``Request.deadline_ticks`` or the tenant default) are enforced at tick
+boundaries: an expired request -- queued or in-slot -- finishes with the
+typed ``DEADLINE_EXCEEDED`` status and frees its slot immediately.
+
+An optional :class:`~repro.serve.overload.OverloadController`
+(``overload=OverloadConfig(...)``) watches the per-tick latency
+breakdown and degrades in counted, reversible steps (cap hops ->
+disable speculation -> shrink context) instead of letting latency grow
+without bound; and an attached :class:`~repro.ft.faults.FaultPlan`
+(``faults=``) injects crashes at the serving boundaries
+(``serve.retrieval`` / ``serve.prefill`` / ``serve.spec_commit`` /
+``serve.ingest``), which the engine survives via snapshot-rewind +
+seeded-backoff retries -- the chaos tests assert every admitted request
+either finishes bit-identical to an unthrottled sequential oracle or
+carries a typed failure status, with the engine still ticking.
 """
 from __future__ import annotations
 
@@ -52,8 +78,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ft.backoff import Backoff, retry_call
+from repro.ft.faults import FaultPlan, InjectedFault
+from repro.ft.faults import check as fault_check
 from repro.models.model import LM
+from .overload import OverloadConfig, OverloadController
 from .sampling import sample
+from .tenancy import (RequestStatus, SubmitOutcome, SubmitStatus,
+                      TenantConfig, TenantScheduler)
 
 
 def _pipeline_default() -> bool:
@@ -96,10 +128,32 @@ class Request:
     max_new_tokens: int = 32
     temperature: float = 0.0
     context_vertex: Optional[int] = None   # RAG seed vertex in the lake
+    tenant: str = "default"            # request class (multi-tenant mode)
+    deadline_ticks: Optional[int] = None   # ticks from submit to finish
     # filled by the engine
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     context_tokens: int = 0            # context appended by the engine
+    status: Optional[RequestStatus] = None  # terminal status at retirement
+    submitted_tick: Optional[float] = None
+    deadline_at: Optional[float] = None    # absolute tick budget
+    finished_tick: Optional[float] = None
+
+
+class UndrainedError(RuntimeError):
+    """``run_until_drained`` exhausted ``max_ticks`` with work still in
+    flight.  Carries the stuck request ids instead of silently returning
+    a partial result that looks like a drain."""
+
+    def __init__(self, queued_ids: List[int], active_ids: List[int],
+                 max_ticks: int):
+        self.queued_ids = list(queued_ids)
+        self.active_ids = list(active_ids)
+        self.max_ticks = max_ticks
+        super().__init__(
+            f"undrained after {max_ticks} ticks: "
+            f"{len(self.queued_ids)} queued {self.queued_ids}, "
+            f"{len(self.active_ids)} active {self.active_ids}")
 
 
 class ServeEngine:
@@ -107,7 +161,10 @@ class ServeEngine:
                  max_len: int = 512, eos_id: int = 2, seed: int = 0,
                  context_fn: Optional[
                      Callable[[np.ndarray], List[np.ndarray]]] = None,
-                 pipeline: Optional[bool] = None, batched: bool = True):
+                 pipeline: Optional[bool] = None, batched: bool = True,
+                 tenants: Optional[List[TenantConfig]] = None,
+                 overload: Optional[OverloadConfig] = None,
+                 faults: Optional[FaultPlan] = None):
         self.model = model
         # ``batched=False`` keeps the pre-pipeline per-request tick
         # (one prefill dispatch+sync per admitted request, one sample
@@ -148,22 +205,106 @@ class ServeEngine:
         self.last_tick: Dict[str, float] = {}   # last tick's latency split
         self.tick_totals: Dict[str, float] = {}  # cumulative latency split
         self._last_retrieval_ms = 0.0
+        # -- multi-tenant admission control (PR 9) ----------------------------
+        self.tick_no = 0        # the admission/deadline clock (1 per step)
+        self.scheduler = (TenantScheduler(tenants, now=0.0)
+                          if tenants is not None else None)
+        self.rejected: List[Request] = []   # shed at submit (typed outcome)
+        self.deadline_exceeded = 0          # typed deadline failures
+        self.expired_in_queue = 0           # ...of which never held a slot
+        self.spec_disabled = False          # overload rung 2 gates prefetch
+        self.overload = (OverloadController(self, overload)
+                         if overload is not None else None)
+        # -- serving-plane fault injection (PR 9) -----------------------------
+        self.faults = faults
+        self._fault_backoff = Backoff(seed=0)   # deterministic retry delays
+        self.fault_hits: Dict[str, int] = {}    # boundary -> injected count
+        self.faults_recovered = 0
+        self.fault_backoff_s = 0.0              # simulated, never slept
 
     # -- admission -------------------------------------------------------------
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> SubmitOutcome:
+        """Offer ``req`` to the engine.  Multi-tenant mode gates it
+        through the tenant's token bucket and bounded queue and returns
+        the typed outcome (``REJECTED`` outcomes carry a retry-after
+        hint and the request is recorded in ``self.rejected`` with
+        ``status=REJECTED``); legacy single-queue mode always admits."""
+        if self.scheduler is not None:
+            out = self.scheduler.submit(req, self.tick_no)
+            if not out.admitted:
+                req.status = RequestStatus.REJECTED
+                self.rejected.append(req)
+            return out
+        req.submitted_tick = self.tick_no
+        if req.deadline_ticks is not None:
+            req.deadline_at = self.tick_no + req.deadline_ticks
         self.queue.append(req)
+        return SubmitOutcome(SubmitStatus.ADMITTED, req.tenant)
+
+    # -- serving-plane fault injection helpers ---------------------------------
+    def _note_fault(self, attempt: int, delay: float, exc) -> None:
+        """``retry_call`` observer: count the injected fault, accumulate
+        the (simulated, never slept) backoff delay."""
+        b = getattr(exc, "boundary", "?")
+        self.fault_hits[b] = self.fault_hits.get(b, 0) + 1
+        self.faults_recovered += 1
+        self.fault_backoff_s += delay
+
+    def _fault_retry(self, fn):
+        """Run ``fn`` under the seeded retry loop, treating injected
+        faults (and only those) as retryable.  Delays are recorded, not
+        slept -- a chaos tick must not block the suite."""
+        return retry_call(fn, retries=8, backoff=self._fault_backoff,
+                          sleep=lambda d: None,
+                          retry_on=(InjectedFault,),
+                          on_retry=self._note_fault)
+
+    def _retrieve_contexts(self, vs: np.ndarray) -> List[np.ndarray]:
+        """The tick's batched context retrieval, crash-checked at the
+        ``serve.retrieval`` boundary (pre-dispatch and at commit).  A
+        commit-side fault rewinds the retrieval plane's snapshot before
+        the retry, so meter/LRU accounting replays exactly once."""
+        if self.faults is None:
+            return self.context_fn(vs)
+
+        def attempt():
+            snap = (self.context_fn.snapshot()
+                    if self._can_prefetch else None)
+            fault_check(self.faults, "serve.retrieval")
+            try:
+                out = self.context_fn(vs)
+                fault_check(self.faults, "serve.retrieval")
+            except InjectedFault:
+                if snap is not None:
+                    self.context_fn.restore(snap)
+                raise
+            return out
+
+        return self._fault_retry(attempt)
 
     def ingest(self, src, dst):
         """Forward an edge batch to the retrieval plane's mutable graph.
 
         Requires an ingest-capable ``context_fn`` (e.g.
         :class:`~repro.serve.retrieval.GraphRetriever`); ingested edges
-        are visible to context retrieval from the next tick on.
+        are visible to context retrieval from the next tick on.  With a
+        fault plan attached the ``serve.ingest`` boundary is checked
+        before the batch is forwarded (the delta plane's own
+        ``ingest.append`` boundary keeps the batch all-or-nothing), and
+        the engine retries through the seeded backoff.
         """
         if self.context_fn is None or not hasattr(self.context_fn,
                                                   "ingest"):
             raise ValueError("no ingest-capable context_fn attached")
-        return self.context_fn.ingest(src, dst)
+        # getattr: tests exercise this forwarder on a bare engine shell
+        if getattr(self, "faults", None) is None:
+            return self.context_fn.ingest(src, dst)
+
+        def attempt():
+            fault_check(self.faults, "serve.ingest")
+            return self.context_fn.ingest(src, dst)
+
+        return self._fault_retry(attempt)
 
     def _clamp_admission(self, req: Request) -> None:
         """``max_len`` is the slot's hard cache-row budget: prompt rows
@@ -220,7 +361,7 @@ class ServeEngine:
         vs = np.asarray([r.context_vertex for r in need], np.int64)
         contexts = self._take_prefetch(vs)
         if contexts is None:
-            contexts = self.context_fn(vs)
+            contexts = self._retrieve_contexts(vs)
         for req, ctx in zip(need, contexts):
             ctx = np.asarray(ctx, np.int32)
             # leave room for generation within the slot's cache rows
@@ -231,11 +372,29 @@ class ServeEngine:
                     [np.asarray(req.prompt, np.int32), ctx])
                 req.context_tokens = int(ctx.size)
 
+    def _pending_count(self) -> int:
+        """Requests waiting for a slot (whichever queue plane is live)."""
+        if self.scheduler is not None:
+            return self.scheduler.pending()
+        return len(self.queue)
+
+    def _peek_admissions(self, width: int) -> List[Request]:
+        """The next ``width`` requests admission would take, without
+        taking them -- the speculative prefetch's prediction.  In
+        multi-tenant mode this previews the DWRR pop order exactly."""
+        if self.scheduler is not None:
+            return self.scheduler.peek(width)
+        return list(itertools.islice(self.queue, 0, width))
+
     def _admit(self) -> None:
         free = [i for i in range(self.max_slots) if self.slots[i] is None]
         admitted: List[tuple] = []
-        while free and self.queue:
-            admitted.append((free.pop(0), self.queue.popleft()))
+        if self.scheduler is not None:
+            for req in self.scheduler.pop(len(free), self.tick_no):
+                admitted.append((free.pop(0), req))
+        else:
+            while free and self.queue:
+                admitted.append((free.pop(0), self.queue.popleft()))
         for _, req in admitted:
             self._clamp_admission(req)
         t0 = time.perf_counter()
@@ -306,8 +465,21 @@ class ServeEngine:
             tmpl = self.model.init_cache(k, self.max_len,
                                          dtype=jnp.float32)
             self._tmp_caches[k] = tmpl
-        logits, tmp_cache = self._prefill_fn(
-            self.params, {"tokens": jnp.asarray(prompts)}, tmpl)
+        if self.faults is None:
+            logits, tmp_cache = self._prefill_fn(
+                self.params, {"tokens": jnp.asarray(prompts)}, tmpl)
+        else:
+            # ``serve.prefill`` boundary: the forward is pure (the engine
+            # cache is only written below), so a crash on either side of
+            # the dispatch retries to identical logits/cache rows
+            def attempt():
+                fault_check(self.faults, "serve.prefill")
+                out = self._prefill_fn(
+                    self.params, {"tokens": jnp.asarray(prompts)}, tmpl)
+                fault_check(self.faults, "serve.prefill")
+                return out
+
+            logits, tmp_cache = self._fault_retry(attempt)
         self.cache = self._write_jit(
             self.cache, tmp_cache,
             jnp.asarray([s for s, _ in grp], jnp.int32))
@@ -331,7 +503,9 @@ class ServeEngine:
         for i in active:
             req = self.slots[i]
             if len(req.output) + 1 >= req.max_new_tokens or \
-                    int(self.slot_pos[i]) + 1 >= self.max_len - 1:
+                    int(self.slot_pos[i]) + 1 >= self.max_len - 1 or \
+                    (req.deadline_at is not None
+                     and self.tick_no + 1 > req.deadline_at):
                 n += 1
         return n
 
@@ -343,7 +517,7 @@ class ServeEngine:
         charged miss-only -- exactly what the synchronous path would do
         one tick later), guarded by a snapshot for the fallback."""
         if self._prefetch is not None or not self._can_prefetch \
-                or not self.queue:
+                or self.spec_disabled or not self._pending_count():
             return
         # certain frees: empty slots, slots already done (EOS at
         # prefill, retired at tick end), and deterministic retirements
@@ -351,17 +525,75 @@ class ServeEngine:
             + self._predict_retiring(active)
         if width <= 0:
             return
-        admits = list(itertools.islice(self.queue, 0, width))
+        admits = self._peek_admissions(width)
         vs = np.asarray([r.context_vertex for r in admits
                          if r.context_vertex is not None], np.int64)
         if vs.size == 0:
             return
         snapshot = self.context_fn.snapshot()
         epoch = self._graph_epoch()
-        contexts = self.context_fn(vs)
+        try:
+            # ``serve.spec_commit`` boundary: a crash at the speculative
+            # commit restores the snapshot and skips this prefetch --
+            # speculation is optional work, the synchronous path next
+            # tick serves the identical result
+            fault_check(self.faults, "serve.spec_commit")
+            contexts = self.context_fn(vs)
+            fault_check(self.faults, "serve.spec_commit")
+        except InjectedFault as e:
+            self.context_fn.restore(snapshot)
+            self.fault_hits[e.boundary] = \
+                self.fault_hits.get(e.boundary, 0) + 1
+            self.faults_recovered += 1
+            return
         self.prefetch_issued += 1
         self._prefetch = {"vs": vs, "contexts": contexts,
                           "snapshot": snapshot, "epoch": epoch}
+
+    # -- deadlines -------------------------------------------------------------
+    def _expire_deadlines(self) -> None:
+        """Deadlines are enforced at tick boundaries (start of tick
+        ``now``: the request had every tick up to and including its
+        budget to finish).  Queued requests past their deadline finish
+        with the typed ``DEADLINE_EXCEEDED`` status without ever holding
+        a slot; in-slot requests are marked done and their slot frees
+        *immediately* -- this same tick's admission reuses it."""
+        now = self.tick_no
+
+        def _expire(req: Request) -> None:
+            req.status = RequestStatus.DEADLINE_EXCEEDED
+            req.done = True
+            req.finished_tick = now
+            self.deadline_exceeded += 1
+            self.expired_in_queue += 1
+            if self.scheduler is not None:
+                self.scheduler.note_finished(req,
+                                             RequestStatus.DEADLINE_EXCEEDED)
+            self.finished.append(req)
+
+        if self.scheduler is not None:
+            for req in self.scheduler.expire(now):
+                _expire(req)
+        elif self.queue and any(r.deadline_at is not None
+                                for r in self.queue):
+            kept: deque[Request] = deque()
+            for req in self.queue:
+                if req.deadline_at is not None and now > req.deadline_at:
+                    _expire(req)
+                else:
+                    kept.append(req)
+            self.queue = kept
+        expired_slot = False
+        for req in self.slots:
+            if req is not None and not req.done \
+                    and req.deadline_at is not None \
+                    and now > req.deadline_at:
+                req.status = RequestStatus.DEADLINE_EXCEEDED
+                req.done = True
+                self.deadline_exceeded += 1
+                expired_slot = True
+        if expired_slot:
+            self._retire()
 
     # -- decode tick -------------------------------------------------------------
     def _active(self) -> List[int]:
@@ -375,6 +607,8 @@ class ServeEngine:
         prefetch in the decode's shadow, and only then samples (the
         logits read is the tick's one host sync)."""
         t0 = time.perf_counter()
+        self.tick_no += 1
+        self._expire_deadlines()
         self._admit()
         t_admit = time.perf_counter()
         active = self._active()
@@ -428,11 +662,19 @@ class ServeEngine:
         }
         for k, v in self.last_tick.items():
             self.tick_totals[k] = self.tick_totals.get(k, 0.0) + v
+        if self.overload is not None:
+            self.overload.observe(self.last_tick["tick_ms"])
         return len(self._active())
 
     def _retire(self) -> None:
         for i, req in enumerate(self.slots):
             if req is not None and req.done:
+                if req.status is None:
+                    req.status = RequestStatus.OK
+                if req.finished_tick is None:
+                    req.finished_tick = self.tick_no
+                if self.scheduler is not None:
+                    self.scheduler.note_finished(req, req.status)
                 self.finished.append(req)
                 self.slots[i] = None
                 self.slot_pos[i] = 0
@@ -447,9 +689,24 @@ class ServeEngine:
         s: Dict[str, object] = {
             "steps": self.steps,
             "finished": len(self.finished),
-            "queued": len(self.queue),
+            "queued": self._pending_count(),
             "active": len(self._active()),
         }
+        if self.scheduler is not None:
+            s["tenants"] = self.scheduler.stats()
+            s["rejected"] = len(self.rejected)
+        if self.deadline_exceeded:
+            s["deadline_exceeded"] = self.deadline_exceeded
+            s["expired_in_queue"] = self.expired_in_queue
+        if self.overload is not None:
+            s["overload"] = self.overload.stats()
+        if self.faults is not None:
+            s["faults"] = {
+                "injected": dict(self.fault_hits),
+                "recovered": self.faults_recovered,
+                "backoff_s": round(self.fault_backoff_s, 3),
+                "plan": self.faults.stats(),
+            }
         s["pipeline"] = {
             "enabled": self.pipeline,
             "prefetch_issued": self.prefetch_issued,
@@ -467,10 +724,21 @@ class ServeEngine:
 
     def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
         """Tick until queue and slots are empty; returns the requests
-        retired during this call (in retirement order)."""
+        retired during this call (in retirement order).
+
+        Exhausting ``max_ticks`` with work still in flight raises
+        :class:`UndrainedError` naming the stuck request ids -- a
+        partial result must never masquerade as a drain."""
         start = len(self.finished)
         for _ in range(max_ticks):
             self.step()
-            if not self.queue and all(s is None for s in self.slots):
-                break
+            if not self._pending_count() \
+                    and all(s is None for s in self.slots):
+                return self.finished[start:]
+        if self._pending_count() or any(s is not None for s in self.slots):
+            queued = (self.scheduler.pending_ids()
+                      if self.scheduler is not None
+                      else [r.request_id for r in self.queue])
+            active = [r.request_id for r in self.slots if r is not None]
+            raise UndrainedError(queued, active, max_ticks)
         return self.finished[start:]

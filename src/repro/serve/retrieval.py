@@ -75,6 +75,7 @@ class GraphRetriever:
         self.vertices_seen = 0  # requests served across all calls
         self.ingest_calls = 0   # ingest() batches accepted
         self.ingest_rows = 0    # edges ingested across all batches
+        self.knob_changes = 0   # overload-ladder knob turns (set_knob)
         if filter_cond is not None and filter_vt is None:
             raise ValueError("filter_cond requires filter_vt (the "
                              "value-side vertex table)")
@@ -191,6 +192,28 @@ class GraphRetriever:
                        else np.zeros(0, np.int32))
         return out
 
+    # -- overload degradation knobs (PR 9) ------------------------------------
+    #: knobs the overload controller may turn: each trades context
+    #: quality for tick latency and is fully reversible (the controller
+    #: saves and restores the old value)
+    DEGRADABLE = ("hops", "max_neighbors")
+
+    def set_knob(self, name: str, value: int) -> int:
+        """Set a degradation knob, returning the previous value.  Only
+        the knobs in :data:`DEGRADABLE` are legal -- the controller must
+        not be able to silently mutate arbitrary retrieval state."""
+        if name not in self.DEGRADABLE:
+            raise ValueError(f"not a degradable knob: {name!r} "
+                             f"(want one of {self.DEGRADABLE})")
+        old = int(getattr(self, name))
+        value = int(value)
+        if value < 1:
+            raise ValueError(f"{name} must stay >= 1 (got {value})")
+        setattr(self, name, value)
+        if value != old:
+            self.knob_changes += 1
+        return old
+
     # -- speculative prefetch support (pipelined serving, PR 8) ---------------
     def snapshot(self) -> Dict[str, object]:
         """Point-in-time state of everything a retrieval call mutates:
@@ -262,6 +285,11 @@ class GraphRetriever:
         counters (for ``ServeEngine.stats()``)."""
         s: Dict[str, object] = {"calls": self.calls,
                                 "vertices_seen": self.vertices_seen}
+        if self.knob_changes:
+            # overload ladder engaged at least once: current knob values
+            s["knobs"] = {"hops": self.hops,
+                          "max_neighbors": self.max_neighbors,
+                          "changes": self.knob_changes}
         delta = getattr(self.adj, "delta", None)
         if delta is not None:
             # mutable plane: pending rows, zone-map pruning, compactions

@@ -1,0 +1,251 @@
+"""Serving-plane chaos: every admitted request finishes or fails typed.
+
+Each test arms one serving-plane fault boundary (``serve.retrieval``,
+``serve.prefill``, ``serve.spec_commit``, ``serve.ingest``) with a
+seeded :class:`~repro.ft.faults.FaultPlan` against a multi-tenant,
+pipelined engine, then asserts the full chaos invariant:
+
+* every admitted request either finishes with tokens **bit-identical**
+  to an unthrottled sequential oracle (no faults, no tenancy, no
+  pipeline) or is reported failed with a typed
+  :class:`~repro.serve.tenancy.RequestStatus` -- none lost, none
+  double-answered;
+* the armed boundary actually fired (a chaos test that never injects is
+  a placebo) and every injection was recovered;
+* the engine keeps ticking afterwards: fresh submissions drain clean.
+
+The oracle works per request id, not per batch: a request's retrieval
+depends only on its own ``context_vertex`` and its decode only on its
+own cache rows, so DWRR reordering and different batch grouping must not
+change any request's tokens.  ``REPRO_FAULT_SEED`` varies the per-
+boundary trip counts, as in the CI fault matrix.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from _engines import engines
+from repro.core import (BY_SRC, EdgeTypeSchema, GraphArBuilder, IOMeter,
+                        PropertySchema, VertexTypeSchema)
+from repro.data.synthetic import document_graph
+from repro.ft.faults import SERVE_BOUNDARIES, FaultPlan
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.retrieval import GraphRetriever
+from repro.serve.tenancy import RequestStatus, TenantConfig
+
+MAX_LEN = 96
+SEED = int(os.environ.get("REPRO_FAULT_SEED", "1"))
+
+
+@pytest.fixture(scope="module")
+def engine_parts():
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg = get_config("smollm-360m").reduced().with_(n_units=2)
+    model = build_model(cfg)
+    return cfg, model, model.init(0)
+
+
+def _fresh_lake(num_docs=200, seed=5):
+    lake = document_graph(num_docs=num_docs, vocab=512, mean_len=32,
+                          seed=seed)
+    b = GraphArBuilder("docs")
+    b.add_vertices(
+        VertexTypeSchema("doc", [PropertySchema("tokens", "tokens")],
+                         labels=list(lake.labels), page_size=128),
+        {"tokens": lake.tokens}, lake.labels)
+    b.add_edges(EdgeTypeSchema("doc", "links", "doc", page_size=128),
+                lake.links_src, lake.links_dst)
+    g = b.build()
+    return g.adjacency("doc-links-doc", BY_SRC), \
+        g.vertex("doc").table["tokens"]
+
+
+def _retriever(engine):
+    adj, tok = _fresh_lake()
+    return GraphRetriever(adj, tok, max_neighbors=2, tokens_per_neighbor=8,
+                          meter=IOMeter(), engine=engine,
+                          page_cache_pages=64)
+
+
+def _requests(cfg, adj, n, mnt=3, tenants=("prod", "batch")):
+    """Deterministic request set; rebuilt fresh for each engine run
+    (the engine mutates Request objects in place).  Seed vertices come
+    from the first half of the id space so ingested edges rooted in the
+    second half can never touch a request's context."""
+    rng = np.random.default_rng(11)
+    deg = adj.degrees()
+    seeds = np.flatnonzero(deg[:len(deg) // 2] > 0)
+    vs = seeds[rng.integers(0, len(seeds), n)]
+    out = []
+    for i, v in enumerate(vs):
+        r = Request(i, rng.integers(4, cfg.vocab_size, size=6)
+                    .astype(np.int32), max_new_tokens=mnt,
+                    context_vertex=int(v))
+        r.tenant = tenants[i % len(tenants)]
+        out.append(r)
+    return out
+
+
+def _ingest_edges(adj):
+    """An edge batch rooted strictly outside the seed-vertex half: the
+    mutation epoch moves (prefetches invalidate + roll back) but no
+    request's retrieved context changes, so the no-ingest oracle stays
+    valid."""
+    n = len(adj.degrees())
+    src = [n - 1, n - 2]
+    dst = [0, 1]
+    return src, dst
+
+
+def _oracle(model, params, cfg, engine, n):
+    """Unthrottled, sequential, fault-free ground truth, per request id."""
+    retr = _retriever(engine)
+    eng = ServeEngine(model, params, max_slots=3, max_len=MAX_LEN,
+                      eos_id=-1, context_fn=retr, pipeline=False)
+    for r in _requests(cfg, retr.adj, n):
+        r.tenant = "default"
+        assert eng.submit(r).admitted
+    fin = eng.run_until_drained()
+    assert len(fin) == n
+    return {r.request_id: r for r in fin}
+
+
+def _check_against_oracle(fin, oracle):
+    for r in fin:
+        if r.status is not RequestStatus.OK:
+            continue
+        o = oracle[r.request_id]
+        np.testing.assert_array_equal(r.prompt, o.prompt)
+        assert r.output == o.output, f"request {r.request_id} diverged"
+        assert r.context_tokens == o.context_tokens
+
+
+def _tenants():
+    return [TenantConfig("prod", weight=3, max_queue=64),
+            TenantConfig("batch", weight=1, max_queue=64)]
+
+
+@pytest.fixture(scope="module")
+def oracles(engine_parts):
+    cfg, model, params = engine_parts
+    return {e: _oracle(model, params, cfg, e, 10) for e in engines()}
+
+
+# ----------------------- one boundary at a time ---------------------------
+
+@pytest.mark.parametrize("boundary", SERVE_BOUNDARIES)
+@pytest.mark.parametrize("engine", engines())
+def test_chaos_boundary_bit_identical_or_typed(engine_parts, oracles,
+                                               engine, boundary):
+    cfg, model, params = engine_parts
+    k = SERVE_BOUNDARIES.index(boundary)
+    trips = 1 + (SEED + k) % 2
+    plan = FaultPlan({boundary: trips})
+    retr = _retriever(engine)
+    eng = ServeEngine(model, params, max_slots=3, max_len=MAX_LEN,
+                      eos_id=-1, context_fn=retr, pipeline=True,
+                      tenants=_tenants(), faults=plan)
+    reqs = _requests(cfg, retr.adj, 10)
+    for r in reqs:
+        assert eng.submit(r).admitted
+    eng.step()
+    eng.step()
+    eng.ingest(*_ingest_edges(retr.adj))   # mid-drain mutation
+    eng.run_until_drained()
+    fin = eng.finished                     # includes the manual-step ticks
+
+    # none lost, none double-answered
+    ids = sorted(r.request_id for r in fin)
+    assert ids == [r.request_id for r in reqs]
+    assert all(r.status is RequestStatus.OK for r in fin)
+    _check_against_oracle(fin, oracles[engine])
+
+    # the armed boundary fired and every injection recovered
+    assert eng.fault_hits.get(boundary, 0) >= 1, \
+        f"{boundary} never injected -- placebo chaos"
+    s = eng.stats()["faults"]
+    assert s["plan"]["fired"][boundary] == trips
+    assert s["plan"]["remaining"] == 0
+    assert s["recovered"] == sum(s["injected"].values())
+
+    # the engine keeps ticking after the chaos drain
+    more = _requests(cfg, retr.adj, 2)
+    for r in more:
+        r.request_id += 100
+        assert eng.submit(r).admitted
+    fin2 = eng.run_until_drained()
+    assert sorted(r.request_id for r in fin2) == [100, 101]
+    assert all(r.status is RequestStatus.OK for r in fin2)
+
+
+# -------------------- all boundaries armed together -----------------------
+
+@pytest.mark.parametrize("engine", engines())
+def test_chaos_all_boundaries_with_deadlines(engine_parts, oracles, engine):
+    """Everything at once: all four serving boundaries armed, rate limits
+    and deadlines live.  Every submitted request ends in exactly one
+    typed bucket (OK / DEADLINE_EXCEEDED / REJECTED); the OK ones are
+    bit-identical to the oracle."""
+    cfg, model, params = engine_parts
+    plan = FaultPlan.from_seed(SEED, boundaries=SERVE_BOUNDARIES,
+                               max_trips=2)
+    retr = _retriever(engine)
+    tenants = [TenantConfig("prod", weight=3, max_queue=64),
+               TenantConfig("batch", weight=1, rate=2.0, burst=6.0,
+                            max_queue=4, deadline_ticks=30)]
+    eng = ServeEngine(model, params, max_slots=3, max_len=MAX_LEN,
+                      eos_id=-1, context_fn=retr, pipeline=True,
+                      tenants=tenants, faults=plan)
+    reqs = _requests(cfg, retr.adj, 10)
+    admitted, rejected = [], []
+    for r in reqs:
+        (admitted if eng.submit(r).admitted else rejected).append(r)
+    eng.step()
+    eng.ingest(*_ingest_edges(retr.adj))
+    eng.run_until_drained()
+    fin = eng.finished                     # includes the manual-step tick
+
+    # exactly-one-bucket accounting over every submitted id
+    fin_ids = [r.request_id for r in fin]
+    rej_ids = [r.request_id for r in eng.rejected]
+    assert sorted(fin_ids + rej_ids) == [r.request_id for r in reqs]
+    assert rej_ids == [r.request_id for r in rejected]
+    for r in fin:
+        assert r.status in (RequestStatus.OK,
+                            RequestStatus.DEADLINE_EXCEEDED)
+    for r in eng.rejected:
+        assert r.status is RequestStatus.REJECTED
+    _check_against_oracle(fin, oracles[engine])
+
+    # at least one boundary fired (from_seed arms >= 1 trip somewhere)
+    assert sum(eng.fault_hits.values()) >= 1
+    s = eng.stats()["faults"]
+    assert s["recovered"] == sum(s["injected"].values())
+
+    # tenant accounting agrees with the typed buckets
+    ts = eng.stats()["tenants"]
+    assert sum(t["finished_ok"] + t["finished_failed"]
+               for t in ts.values()) == len(fin)
+    assert sum(t["rejected_rate"] + t["rejected_queue_full"]
+               for t in ts.values()) == len(rejected)
+
+
+# --------------------- fault during ingest is atomic ----------------------
+
+def test_chaos_ingest_fault_preserves_batch_atomicity(engine_parts):
+    """A serve.ingest injection happens *before* the delta-plane append:
+    after retry the batch lands exactly once -- neighbor sets show no
+    duplicate edges and the epoch moved exactly once per batch."""
+    cfg, model, params = engine_parts
+    retr = _retriever("numpy")
+    eng = ServeEngine(model, params, max_slots=2, max_len=MAX_LEN,
+                      eos_id=-1, context_fn=retr,
+                      faults=FaultPlan({"serve.ingest": 2}))
+    src, dst = _ingest_edges(retr.adj)
+    delta = eng.ingest(src, dst)
+    assert eng.fault_hits.get("serve.ingest", 0) == 2
+    # the batch landed exactly once, not once per retry attempt
+    assert retr.ingest_calls == 1
+    assert delta.pending_rows() == len(src)

@@ -1,0 +1,508 @@
+"""Admission-controlled multi-tenant serving: fairness as an invariant.
+
+Three layers under test, bottom up:
+
+* :class:`~repro.ft.backoff.TokenBucket` -- deterministic under an
+  explicit tick clock (no wall-clock reads anywhere: the same submit
+  schedule replays to the same admit/reject/retry-after decisions);
+* :class:`~repro.serve.tenancy.TenantScheduler` -- DWRR is
+  work-conserving (pop(k) == min(k, pending)), starvation-free, and
+  *exactly* weight-proportional when every tenant is backlogged --
+  including across arbitrarily-chunked pop() calls (the mid-visit
+  resume must not re-credit the head tenant's quantum);
+* :class:`~repro.serve.engine.ServeEngine` -- typed submit outcomes,
+  tick-boundary deadline enforcement (queued and in-slot), the overload
+  degradation ladder, and ``run_until_drained`` raising a typed
+  :class:`~repro.serve.engine.UndrainedError` instead of silently
+  returning a partial drain.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_shim import HAVE_HYPOTHESIS, given, settings, st
+from repro.core import (BY_SRC, EdgeTypeSchema, GraphArBuilder, IOMeter,
+                        PropertySchema, VertexTypeSchema)
+from repro.data.synthetic import document_graph
+from repro.ft.backoff import TokenBucket
+from repro.serve.engine import Request, ServeEngine, UndrainedError
+from repro.serve.overload import LADDER, OverloadConfig, OverloadController
+from repro.serve.retrieval import GraphRetriever
+from repro.serve.tenancy import (RejectReason, RequestStatus, SubmitStatus,
+                                 TenantConfig, TenantScheduler)
+
+MAX_LEN = 64
+
+
+def _req(i, tenant="default", deadline=None, size=4):
+    return Request(i, np.full(size, 7, np.int32), max_new_tokens=2,
+                   tenant=tenant, deadline_ticks=deadline)
+
+
+def _sched(*cfgs):
+    return TenantScheduler(list(cfgs))
+
+
+# ------------------------------ token bucket -------------------------------
+
+def test_token_bucket_rate_burst_and_retry_after():
+    b = TokenBucket(rate=0.5, burst=2.0)
+    assert b.try_take(0) == (True, 0.0)      # burst admits immediately
+    assert b.try_take(0) == (True, 0.0)
+    ok, wait = b.try_take(0)                 # empty: 1 token / 0.5 rate
+    assert not ok and wait == pytest.approx(2.0)
+    ok, _ = b.try_take(2.0)                  # waiting retry_after works
+    assert ok
+    assert not b.try_take(2.0)[0]
+
+
+def test_token_bucket_zero_rate_never_refills():
+    b = TokenBucket(rate=0.0, burst=1.0)
+    assert b.try_take(0)[0]
+    ok, wait = b.try_take(1e9)
+    assert not ok and wait == float("inf")
+
+
+def test_token_bucket_level_never_exceeds_burst():
+    b = TokenBucket(rate=100.0, burst=3.0)
+    b.try_take(0)
+    b.refill(1e6)
+    assert b.level == 3.0
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 20), st.integers(1, 40),
+       st.lists(st.integers(0, 5), min_size=1, max_size=40))
+def test_token_bucket_deterministic_replay(rate10, burst10, gaps):
+    """Two fresh buckets fed the identical (seeded) submit schedule make
+    identical decisions with identical retry hints -- determinism is the
+    chaos tests' foundation."""
+    rate, burst = rate10 / 10.0, burst10 / 10.0
+    ticks = np.cumsum(gaps)
+
+    def run():
+        b = TokenBucket(rate=rate, burst=burst)
+        return [b.try_take(float(t)) for t in ticks]
+
+    a, b = run(), run()
+    assert a == b
+    for ok, wait in a:
+        assert ok == (wait == 0.0)
+
+
+# ----------------------------- DWRR scheduling -----------------------------
+
+def test_dwrr_exact_weight_shares_when_backlogged():
+    """All tenants backlogged: one full round serves exactly ``weight``
+    requests per tenant -- fairness as an equality."""
+    sched = _sched(TenantConfig("a", weight=3, max_queue=100),
+                   TenantConfig("b", weight=2, max_queue=100),
+                   TenantConfig("c", weight=1, max_queue=100))
+    for i in range(60):
+        name = "abc"[i % 3]
+        assert sched.submit(_req(i, name), 0).admitted
+    rounds = 3
+    got = sched.pop(rounds * 6, 1)           # W = 3 + 2 + 1
+    counts = {n: sum(1 for r in got if r.tenant == n) for n in "abc"}
+    assert counts == {"a": 3 * rounds, "b": 2 * rounds, "c": 1 * rounds}
+
+
+def test_dwrr_chunked_pops_do_not_recredit_head():
+    """pop(1) x N must serve the same weighted shares as one pop(N): a
+    mid-visit resume must not grant the head tenant a fresh quantum."""
+    def serve(chunks):
+        sched = _sched(TenantConfig("a", weight=3, max_queue=100),
+                       TenantConfig("b", weight=1, max_queue=100))
+        for i in range(40):
+            sched.submit(_req(i, "ab"[i % 2]), 0)
+        out = []
+        for c in chunks:
+            out.extend(sched.pop(c, 1))
+        return [r.tenant for r in out]
+
+    assert serve([1] * 16) == serve([16]) == serve([5, 3, 7, 1])
+    counts = {n: serve([1] * 16).count(n) for n in "ab"}
+    assert counts == {"a": 12, "b": 4}       # 4 rounds of W=4
+
+
+def test_dwrr_work_conserving_and_starvation_free():
+    sched = _sched(TenantConfig("hog", weight=8, max_queue=100),
+                   TenantConfig("mouse", weight=1, max_queue=100))
+    for i in range(30):
+        sched.submit(_req(i, "hog" if i < 25 else "mouse"), 0)
+    got = sched.pop(12, 1)
+    assert len(got) == 12                    # work-conserving
+    assert any(r.tenant == "mouse" for r in got)   # served within a round
+    # an idle tenant donates: only the hog remains after the mice drain
+    rest = sched.pop(100, 2)
+    assert len(rest) == 30 - 12
+    assert sched.pending() == 0
+
+
+if HAVE_HYPOTHESIS:
+    _mixes = st.lists(
+        st.tuples(st.integers(1, 6), st.integers(0, 12)),
+        min_size=1, max_size=5)
+
+    @settings(max_examples=60, deadline=None)
+    @given(_mixes, st.integers(0, 40))
+    def test_dwrr_work_conserving_property(mix, k):
+        """Across random weight/backlog mixes, pop(k) always returns
+        min(k, pending) -- no tenant mix can strand schedulable work."""
+        cfgs = [TenantConfig(f"t{j}", weight=w, max_queue=1000)
+                for j, (w, _) in enumerate(mix)]
+        sched = _sched(*cfgs)
+        i = 0
+        for j, (_, backlog) in enumerate(mix):
+            for _ in range(backlog):
+                assert sched.submit(_req(i, f"t{j}"), 0).admitted
+                i += 1
+        pending = sched.pending()
+        got = sched.pop(k, 1)
+        assert len(got) == min(k, pending)
+        assert sched.pending() == pending - len(got)
+        # no duplicates, nothing invented
+        ids = [r.request_id for r in got]
+        assert len(set(ids)) == len(ids)
+
+    @settings(max_examples=60, deadline=None)
+    @given(_mixes, st.lists(st.integers(1, 7), min_size=1, max_size=8))
+    def test_dwrr_peek_matches_pop_across_chunks(mix, chunks):
+        """peek(k) previews exactly what the next pops return, even when
+        the pops are split into arbitrary chunks (the pipelined engine's
+        speculative admission relies on this)."""
+        def build():
+            cfgs = [TenantConfig(f"t{j}", weight=w, max_queue=1000)
+                    for j, (w, _) in enumerate(mix)]
+            s = _sched(*cfgs)
+            i = 0
+            for j, (_, backlog) in enumerate(mix):
+                for _ in range(backlog):
+                    s.submit(_req(i, f"t{j}"), 0)
+                    i += 1
+            return s
+
+        k = sum(chunks)
+        want = [r.request_id for r in build().peek(k)]
+        sched = build()
+        got = []
+        for c in chunks:
+            # a peek before every chunked pop must agree with the pop
+            p = [r.request_id for r in sched.peek(c)]
+            popped = [r.request_id for r in sched.pop(c, 1)]
+            assert p == popped
+            got.extend(popped)
+        assert got == want
+
+
+# --------------------------- admission gating ------------------------------
+
+def test_submit_rejects_with_typed_retry_after():
+    sched = _sched(TenantConfig("t", rate=1.0, burst=2.0, max_queue=10))
+    assert sched.submit(_req(0, "t"), 0).admitted
+    assert sched.submit(_req(1, "t"), 0).admitted
+    out = sched.submit(_req(2, "t"), 0)      # bucket empty at tick 0
+    assert out.status is SubmitStatus.REJECTED
+    assert out.reason is RejectReason.RATE_LIMITED
+    assert out.retry_after == 1              # ceil(1 token / rate 1)
+    # waiting the hint makes the next submit admissible
+    assert sched.submit(_req(3, "t"), 0 + out.retry_after).admitted
+
+
+def test_submit_sheds_on_bounded_queue():
+    sched = _sched(TenantConfig("t", max_queue=2))
+    assert sched.submit(_req(0, "t"), 0).admitted
+    assert sched.submit(_req(1, "t"), 0).admitted
+    out = sched.submit(_req(2, "t"), 0)
+    assert out.status is SubmitStatus.REJECTED
+    assert out.reason is RejectReason.QUEUE_FULL
+    assert out.retry_after >= 1
+    sched.pop(1, 1)                          # a slot drains
+    assert sched.submit(_req(3, "t"), 1).admitted
+
+
+def test_submit_unknown_tenant_typed():
+    out = _sched(TenantConfig("t")).submit(_req(0, "nope"), 0)
+    assert out.status is SubmitStatus.REJECTED
+    assert out.reason is RejectReason.UNKNOWN_TENANT
+    assert out.retry_after is None           # retrying cannot help
+
+
+def test_queue_expiry_is_typed_and_counted():
+    sched = _sched(TenantConfig("t", deadline_ticks=2, max_queue=10))
+    sched.submit(_req(0, "t"), 0)
+    sched.submit(_req(1, "t", deadline=100), 0)   # per-request override
+    assert sched.expire(2) == []             # now == deadline_at: still live
+    expired = sched.expire(3)
+    assert [r.request_id for r in expired] == [0]
+    assert sched.pending() == 1
+    assert sched.stats()["t"]["expired"] == 1
+
+
+def test_tenant_config_validation():
+    with pytest.raises(ValueError):
+        TenantConfig("t", weight=0)
+    with pytest.raises(ValueError):
+        TenantConfig("t", max_queue=0)
+    with pytest.raises(ValueError):
+        TenantConfig("t", rate=0.0)
+    with pytest.raises(ValueError):
+        TenantScheduler([TenantConfig("t"), TenantConfig("t")])
+    with pytest.raises(ValueError):
+        TenantScheduler([])
+
+
+# ------------------------- overload ladder (unit) --------------------------
+
+def _tiny_retriever():
+    lake = document_graph(num_docs=60, vocab=128, mean_len=8, seed=3)
+    b = GraphArBuilder("docs")
+    b.add_vertices(
+        VertexTypeSchema("doc", [PropertySchema("tokens", "tokens")],
+                         labels=list(lake.labels), page_size=64),
+        {"tokens": lake.tokens}, lake.labels)
+    b.add_edges(EdgeTypeSchema("doc", "links", "doc", page_size=64),
+                lake.links_src, lake.links_dst)
+    g = b.build()
+    return GraphRetriever(g.adjacency("doc-links-doc", BY_SRC),
+                          g.vertex("doc").table["tokens"],
+                          max_neighbors=8, tokens_per_neighbor=4,
+                          engine="numpy", page_cache_pages=None, hops=2)
+
+
+class _StubEngine:
+    """Just enough engine surface for the controller: the knob targets."""
+
+    def __init__(self, retr):
+        self.context_fn = retr
+        self.spec_disabled = False
+        self.tick_no = 0
+
+    def _discard_prefetch(self):
+        pass
+
+
+def test_overload_ladder_degrades_and_restores_in_order():
+    retr = _tiny_retriever()
+    eng = _StubEngine(retr)
+    ctl = OverloadController(eng, OverloadConfig(
+        target_p99_ms=10.0, window=8, patience=2))
+    for _ in range(30):                      # sustained overload
+        ctl.observe(100.0)
+    assert ctl.level == len(LADDER) == 3
+    assert ctl.degrade_steps == 3 and ctl.restore_steps == 0
+    assert retr.hops == 1                    # rung 1
+    assert eng.spec_disabled                 # rung 2
+    assert retr.max_neighbors == 4           # rung 3: halved from 8
+    for _ in range(60):                      # sustained recovery
+        ctl.observe(0.5)
+    assert ctl.level == 0 and ctl.restore_steps == 3
+    assert retr.hops == 2                    # every knob restored
+    assert not eng.spec_disabled
+    assert retr.max_neighbors == 8
+    steps = [(h["dir"], h["step"]) for h in ctl.stats()["transitions"]]
+    assert steps == [("degrade", "cap_hops"),
+                     ("degrade", "no_speculation"),
+                     ("degrade", "shrink_context"),
+                     ("restore", "shrink_context"),
+                     ("restore", "no_speculation"),
+                     ("restore", "cap_hops")]
+
+
+def test_overload_single_slow_tick_is_debounced():
+    ctl = OverloadController(_StubEngine(_tiny_retriever()),
+                             OverloadConfig(target_p99_ms=10.0, window=8,
+                                            patience=3))
+    for _ in range(20):
+        ctl.observe(1.0)
+    ctl.observe(500.0)                       # one compile-like spike
+    for _ in range(20):
+        ctl.observe(1.0)
+    assert ctl.level == 0 and ctl.degrade_steps == 0
+
+
+def test_set_knob_rejects_unknown_and_degenerate():
+    retr = _tiny_retriever()
+    with pytest.raises(ValueError):
+        retr.set_knob("meter", 0)
+    with pytest.raises(ValueError):
+        retr.set_knob("max_neighbors", 0)
+    assert retr.set_knob("max_neighbors", 4) == 8
+    assert retr.stats()["knobs"]["max_neighbors"] == 4
+
+
+# ------------------------- engine integration ------------------------------
+
+@pytest.fixture(scope="module")
+def engine_parts():
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg = get_config("smollm-360m").reduced().with_(n_units=2)
+    model = build_model(cfg)
+    return cfg, model, model.init(0)
+
+
+def _mk(model, params, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("eos_id", -1)
+    return ServeEngine(model, params, **kw)
+
+
+def _prompts(cfg, n, seed=0, mnt=2):
+    rng = np.random.default_rng(seed)
+    return [Request(i, rng.integers(4, cfg.vocab_size, size=5)
+                    .astype(np.int32), max_new_tokens=mnt)
+            for i in range(n)]
+
+
+def test_engine_fairness_under_saturation(engine_parts):
+    """Saturated two-tenant engine: admitted slots split by weight, no
+    tenant starves, and stats()['tenants'] carries the full field set."""
+    cfg, model, params = engine_parts
+    eng = _mk(model, params,
+              tenants=[TenantConfig("prod", weight=3, max_queue=64),
+                       TenantConfig("best_effort", weight=1, max_queue=64)])
+    reqs = _prompts(cfg, 32, mnt=2)
+    for i, r in enumerate(reqs):
+        r.tenant = "prod" if i % 2 == 0 else "best_effort"
+        assert eng.submit(r).admitted
+    fin = eng.run_until_drained()
+    assert len(fin) == 32
+    assert all(r.status is RequestStatus.OK for r in fin)
+    ts = eng.stats()["tenants"]
+    # DWRR order: within the first half of retirements prod leads ~3:1
+    first = [r.tenant for r in fin[:16]]
+    assert first.count("prod") == 12 and first.count("best_effort") == 4
+    for name in ("prod", "best_effort"):
+        for field in ("weight", "queue_depth", "submitted", "admitted",
+                      "rejected_rate", "rejected_queue_full", "expired",
+                      "scheduled", "finished_ok", "finished_failed",
+                      "bucket_level", "deficit", "rate", "max_queue"):
+            assert field in ts[name]
+    assert ts["prod"]["finished_ok"] == 16
+
+
+def test_engine_typed_rejection_and_backpressure(engine_parts):
+    cfg, model, params = engine_parts
+    eng = _mk(model, params,
+              tenants=[TenantConfig("t", rate=1.0, burst=2.0, max_queue=2)])
+    reqs = _prompts(cfg, 4)
+    for r in reqs:
+        r.tenant = "t"
+    outs = [eng.submit(r) for r in reqs]
+    assert [o.status for o in outs] == [
+        SubmitStatus.ADMITTED, SubmitStatus.ADMITTED,
+        SubmitStatus.REJECTED, SubmitStatus.REJECTED]
+    assert outs[2].retry_after == 1
+    assert len(eng.rejected) == 2
+    assert all(r.status is RequestStatus.REJECTED for r in eng.rejected)
+    fin = eng.run_until_drained()
+    # every admitted request accounted for, none lost, none doubled
+    assert sorted(r.request_id for r in fin) == [0, 1]
+    assert eng.stats()["rejected"] == 2
+    # backpressure cleared: the bucket refilled while serving ticked
+    late = _prompts(cfg, 1, seed=9)[0]
+    late.tenant = "t"
+    assert eng.submit(late).admitted
+
+
+def test_engine_deadline_exceeded_in_slot_and_queue(engine_parts):
+    """A slot request past its deadline finishes with the typed status
+    and frees the slot that same tick; queued requests expire without
+    ever holding a slot."""
+    cfg, model, params = engine_parts
+    eng = _mk(model, params, max_slots=1,
+              tenants=[TenantConfig("t", max_queue=16, deadline_ticks=3)])
+    long, short, queued = _prompts(cfg, 3, mnt=40)
+    long.deadline_ticks = 4                  # expires while decoding
+    short.deadline_ticks = 100
+    short.max_new_tokens = 2
+    queued.deadline_ticks = 2                # expires while queued
+    for r in (long, short, queued):
+        r.tenant = "t"
+        assert eng.submit(r).admitted
+    fin = eng.run_until_drained()
+    by_id = {r.request_id: r for r in fin}
+    assert by_id[long.request_id].status is RequestStatus.DEADLINE_EXCEEDED
+    assert 0 < len(by_id[long.request_id].output) < 40   # partial, typed
+    assert by_id[queued.request_id].status is \
+        RequestStatus.DEADLINE_EXCEEDED
+    assert by_id[queued.request_id].output == []         # never held a slot
+    assert by_id[short.request_id].status is RequestStatus.OK
+    s = eng.stats()
+    assert s["deadline_exceeded"] == 2 and s["expired_in_queue"] == 1
+    assert s["tenants"]["t"]["finished_failed"] >= 1
+    # the engine keeps ticking after deadline shedding
+    nxt = _prompts(cfg, 1, seed=7)[0]
+    nxt.tenant = "t"
+    assert eng.submit(nxt).admitted
+    assert len(eng.run_until_drained()) == 1
+
+
+def test_engine_deadlines_without_tenancy(engine_parts):
+    """deadline_ticks works on the legacy single-queue path too."""
+    cfg, model, params = engine_parts
+    eng = _mk(model, params, max_slots=1)
+    a, b_ = _prompts(cfg, 2, mnt=30)
+    a.deadline_ticks = 3
+    b_.deadline_ticks = 1                    # expires before a slot frees
+    assert eng.submit(a).admitted and eng.submit(b_).admitted
+    fin = eng.run_until_drained()
+    by_id = {r.request_id: r for r in fin}
+    assert by_id[0].status is RequestStatus.DEADLINE_EXCEEDED
+    assert by_id[1].status is RequestStatus.DEADLINE_EXCEEDED
+    assert by_id[1].output == []
+
+
+def test_single_unmetered_tenant_matches_legacy_queue(engine_parts):
+    """One unmetered tenant with a roomy queue reduces to the legacy
+    FIFO: same retirement order, same outputs."""
+    cfg, model, params = engine_parts
+
+    def run(**kw):
+        eng = _mk(model, params, **kw)
+        for r in _prompts(cfg, 8, mnt=3):
+            assert eng.submit(r).admitted
+        return eng.run_until_drained()
+
+    legacy = run()
+    tenant = run(tenants=[TenantConfig("default", max_queue=64)])
+    assert [r.request_id for r in legacy] == [r.request_id for r in tenant]
+    for a, b_ in zip(legacy, tenant):
+        assert a.output == b_.output
+
+
+def test_run_until_drained_raises_typed_undrained(engine_parts):
+    cfg, model, params = engine_parts
+    eng = _mk(model, params, max_slots=1)
+    for r in _prompts(cfg, 4, mnt=8):
+        eng.submit(r)
+    with pytest.raises(UndrainedError) as ei:
+        eng.run_until_drained(max_ticks=3)
+    err = ei.value
+    assert err.max_ticks == 3
+    stuck = set(err.queued_ids) | set(err.active_ids)
+    assert stuck and stuck <= {0, 1, 2, 3}
+    assert err.active_ids                    # someone holds the slot
+    # the report is diagnosis, not corruption: draining still completes
+    fin = eng.run_until_drained()
+    assert len(fin) + 0 == 4 - 0 or len(eng.finished) == 4
+
+
+def test_engine_overload_integration(engine_parts):
+    """An impossible latency target drives the engine down the whole
+    ladder mid-drain; serving completes and stats() shows the trace."""
+    cfg, model, params = engine_parts
+    eng = _mk(model, params,
+              tenants=[TenantConfig("t", max_queue=64)],
+              overload=OverloadConfig(target_p99_ms=1e-6, window=4,
+                                      patience=1))
+    for r in _prompts(cfg, 12, mnt=3):
+        r.tenant = "t"
+        eng.submit(r)
+    fin = eng.run_until_drained()
+    assert len(fin) == 12
+    ov = eng.stats()["overload"]
+    assert ov["level"] == 3 and ov["degrade_steps"] == 3
+    assert ov["active_steps"] == list(LADDER)
+    assert eng.spec_disabled
