@@ -19,9 +19,13 @@ Four sections:
 * ``partitioned_pruned_*`` -- statistics pushdown: label-filtered
   retrieval over a community-local graph where partitions' min/max id
   hulls miss the predicate's qualifying range, so the partition plane
-  skips their decode and I/O wholesale while the monolithic path decodes
-  everything.  Ids are asserted identical; the derived column records
-  the pruned-partition count and the I/O saving.
+  skips their decode and I/O wholesale.  Since PR 10 the monolithic
+  path page-prunes to the *same* final page set (partition-pruned
+  pages are a subset of page-pruned ones), so these rows pin a wash --
+  partition hulls are now a cheap coarse pre-filter, and the pruning
+  win itself is measured A/B against a no-prune baseline in
+  ``bench_pruning``.  Ids are asserted identical; the derived column
+  records the pruned-partition count and the I/O delta (now 0).
 
 * interpret-mode rows (``REPRO_INTERPRET=1``): the pallas rows rerun
   with the suffix ``_interp`` -- on CPU the pallas engine always runs

@@ -1,0 +1,209 @@
+"""Page-granular statistics pushdown (PR 10): zone maps vs full decode.
+
+Three sections, each A/B against the *same* retrieval with page pruning
+disabled (``prune_page_list`` patched to a pass-through -- the pre-PR
+behaviour; partition hulls are not involved, the column is monolithic,
+so the page-level sieve is the only variable):
+
+* ``page_pruned_label_*`` -- selective label-filtered retrieval over a
+  community-local graph: the predicate's qualifying hull covers the
+  first eighth of the id space, so ~7/8 of the touched pages are
+  zone-map-pruned before staging -- never gathered, never decoded,
+  never charged.  Ids are asserted bit-identical to the unpruned
+  oracle and I/O bytes strictly less before any timing.
+
+* ``page_pruned_numeric_*`` -- the same regime through a
+  :class:`~repro.core.numeric.NumericFilter` (``AGE < N/8``): numeric
+  ``Cond`` leaves derive the same hull, and the filter's own property
+  reads are zone-map-skipped on top.
+
+* ``page_unpruned_*`` -- an all-true predicate whose hull covers the
+  whole id space: nothing prunes, meters are asserted *exactly* equal
+  to the patched baseline, and the emitted ratio tracks that the sieve
+  is free when it has nothing to cut (the prune check is a vectorised
+  host-side hull intersect over the deduplicated page list).
+
+A final steady-state check warms the pruned path, then asserts zero
+retraces over measured ticks with varying batch sizes (the pruned
+staged vectors keep the unpruned request's pow2 size class, so pruning
+never mints a new jit shape).  ``REPRO_BENCH_SMOKE=1`` shrinks the
+graph so CI runs the suite in seconds; interpret-mode rows follow the
+bench_partition convention (``*_interp`` suffix).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import (BY_SRC, ENC_GRAPHAR, IOMeter, L, LabelFilter,
+                        NumericFilter, NumProp, build_adjacency,
+                        retrieve_neighbors_batch)
+from repro.core.schema import PropertySchema, VertexTypeSchema
+from repro.core.vertex import VertexTable
+from repro.kernels import _pad
+from repro.kernels.pac_decode import ops as pdo
+
+from .util import emit
+
+SMOKE = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+INTERP = bool(os.environ.get("REPRO_INTERPRET"))
+N = 2_000 if SMOKE else 20_000
+DEG = 8 if SMOKE else 16
+PAGE = 512 if SMOKE else 2048
+BATCH_SIZES = (64,) if SMOKE else (64, 512)
+REPS = 8 if SMOKE else 120
+
+
+def _paired(fa, fb, reps=REPS):
+    """Interleaved A/B timing (see bench_resident): min us/call for each
+    plus the median of per-pair ratios (drift-robust on a shared box)."""
+    fa(), fb(), fa(), fb()
+    ta, tb = [], []
+    for i in range(reps):
+        pair = (fa, ta), (fb, tb)
+        for fn, acc in (pair if i % 2 == 0 else pair[::-1]):
+            t0 = time.perf_counter()
+            fn()
+            acc.append(time.perf_counter() - t0)
+    ratios = sorted(b / a for a, b in zip(ta, tb))
+    return (min(ta) * 1e6, min(tb) * 1e6, ratios[len(ratios) // 2])
+
+
+def _no_prune(col, pages, qual):
+    return pages, None
+
+
+def _unpruned(fn):
+    """Run ``fn`` with page pruning patched out -- the pre-PR baseline.
+
+    ``pdo.prune_page_list`` is the binding every retrieval path resolves
+    (the numpy engine routes through ``pdo.decode_row_ranges``), and the
+    patched run keeps ``pruned=False`` staging, whose shapes the padding
+    ladder makes identical to the pruned run's -- so A and B share one
+    jit cache and the timing deltas are pruning, not retraces.
+    """
+    def run():
+        saved = pdo.prune_page_list
+        pdo.prune_page_list = _no_prune
+        try:
+            return fn()
+        finally:
+            pdo.prune_page_list = saved
+    return run
+
+
+def _fixture():
+    # community-local graph (see bench_partition): each page's dst hull
+    # tracks its source range, the regime GraphAr's chunked layouts put
+    # you in.  Clipped, not wrapped: one wrap-around edge would stretch
+    # a boundary page's min/max across the whole id space.
+    off = np.concatenate([np.arange(-(DEG // 2), 0),
+                          np.arange(1, DEG - DEG // 2 + 1)])
+    src = np.repeat(np.arange(N), len(off))
+    dst = np.clip(np.arange(N)[:, None] + off[None, :], 0, N - 1).ravel()
+    return build_adjacency(src, dst, N, N, BY_SRC, ENC_GRAPHAR,
+                           page_size=PAGE)
+
+
+def _vt():
+    labels = {"HOT": np.arange(N) < N // 8,
+              "ALL": np.ones(N, bool)}
+    return VertexTable.build(
+        VertexTypeSchema("v", [PropertySchema("age", "int64")],
+                         labels=["HOT", "ALL"], page_size=PAGE),
+        {"age": np.arange(N, dtype=np.int64)}, labels, num_vertices=N)
+
+
+def _check(adj, vs, engine, make_filt, expect_savings):
+    """Bit-identity + meter ordering vs the unpruned baseline."""
+    m_a, m_b = IOMeter(), IOMeter()
+    want = _unpruned(lambda: retrieve_neighbors_batch(
+        adj, vs, PAGE, m_a, engine=engine, fused=engine != "numpy",
+        resident=engine != "numpy", filter=make_filt()))()
+    got = retrieve_neighbors_batch(
+        adj, vs, PAGE, m_b, engine=engine, fused=engine != "numpy",
+        resident=engine != "numpy", filter=make_filt())
+    assert got == want, "pruned ids must match the unpruned oracle"
+    if expect_savings:
+        assert m_b.nbytes < m_a.nbytes, "selective hull must save I/O"
+    else:
+        assert (m_b.nbytes, m_b.nrequests) == (m_a.nbytes, m_a.nrequests), \
+            "all-true hull must cost exactly the unpruned path"
+    return m_a.nbytes, m_b.nbytes
+
+
+def _engines():
+    eng = ["numpy", "jax", "pallas"]
+    if INTERP:
+        eng.append("pallas_interp")  # same engine, explicit interp row tag
+    return eng
+
+
+def _resolve(engine):
+    return ("pallas", "_interp") if engine == "pallas_interp" \
+        else (engine, "")
+
+
+def run() -> None:
+    adj = _fixture()
+    vt = _vt()
+    col = adj.table["<dst>"].encoded
+    AGE = NumProp("age")
+
+    sections = (
+        ("label", lambda: LabelFilter(vt, L("HOT")), True),
+        ("numeric", lambda: NumericFilter(vt, AGE < N // 8), True),
+        ("unpruned", lambda: LabelFilter(vt, L("ALL")), False),
+    )
+    for engine in _engines():
+        eng, tag = _resolve(engine)
+        for bs in BATCH_SIZES:
+            vs = np.random.default_rng(bs).integers(0, N, bs)
+            for name, make_filt, saves in sections:
+                nb_un, nb_pr = _check(adj, vs, eng, make_filt, saves)
+                filt = make_filt()
+                fused = eng != "numpy"
+                fp = lambda: retrieve_neighbors_batch(
+                    adj, vs, PAGE, engine=eng, fused=fused,
+                    resident=fused, filter=filt)
+                fu = _unpruned(fp)
+                before = (col.prune_stats.pages_pruned,
+                          col.prune_stats.io_saved_bytes)
+                fp()
+                d_pages = col.prune_stats.pages_pruned - before[0]
+                d_bytes = col.prune_stats.io_saved_bytes - before[1]
+                t_pr, t_un, ratio = _paired(fp, fu)
+                row = "page_pruned" if saves else "page"
+                emit(f"{row}_{name}_{eng}{tag}_bs{bs}", t_pr,
+                     f"unpruned_us={t_un:.2f};"
+                     f"unpruned_over_pruned={ratio:.2f};"
+                     f"pages_pruned={d_pages};"
+                     f"io_saved_pct={100 * (1 - nb_pr / max(nb_un, 1)):.0f};"
+                     f"io_saved_bytes={d_bytes};ids_identical=1")
+                emit(f"{row}_{name}_{eng}{tag}_bs{bs}:speedup_pct",
+                     100 * ratio, "")
+
+    # ---- steady state: pruning never mints a new jit shape ----------------
+    rng = np.random.default_rng(7)
+    filt = LabelFilter(vt, L("HOT"))
+    tick = lambda bs: retrieve_neighbors_batch(
+        adj, rng.integers(0, N, bs), PAGE, engine="jax", fused=True,
+        resident=True, filter=filt)
+    ticks = (16, 24, 40, 64) if SMOKE else (16, 64, 200, 512)
+    stable = 0
+    for _ in range(30):  # warm until the pow2 ladder is covered
+        t0 = _pad.trace_count()
+        for bs in ticks:
+            tick(bs)
+        stable = stable + 1 if _pad.trace_count() == t0 else 0
+        if stable >= 3:
+            break
+    before = _pad.trace_count()
+    for _ in range(5):
+        for bs in ticks:
+            tick(bs)
+    retraces = _pad.trace_count() - before
+    assert retraces == 0, "pruned steady state must not retrace"
+    emit("page_pruned_steady_retraces", float(retraces), "target=0")

@@ -15,8 +15,9 @@ from . import (bench_batch_scaling, bench_complex_filter, bench_e2e,
                bench_ingest, bench_kernels, bench_label_filter,
                bench_label_scaling, bench_label_storage, bench_media,
                bench_neighbor, bench_partition, bench_pipeline,
-               bench_resident, bench_serving, bench_simple_filter,
-               bench_storage, bench_transform, bench_traversal)
+               bench_pruning, bench_resident, bench_serving,
+               bench_simple_filter, bench_storage, bench_transform,
+               bench_traversal)
 from .util import header, set_suite, write_json
 
 SUITES = {
@@ -32,6 +33,7 @@ SUITES = {
     "filtered_retrieval": bench_label_filter.run_retrieval,
     "resident": bench_resident.run,
     "partition": bench_partition.run,
+    "pruning": bench_pruning.run,
     "traversal": bench_traversal.run,
     "ingest": bench_ingest.run,
     "table2_media": bench_media.run,
@@ -49,13 +51,13 @@ def main() -> None:
                     help="comma-separated suite names")
     ap.add_argument("--json", default=None,
                     help="machine-readable results path ('' to skip); "
-                         "defaults to BENCH_PR9.json, or bench_smoke.json "
+                         "defaults to BENCH_PR10.json, or bench_smoke.json "
                          "under REPRO_BENCH_SMOKE so shrunk-workload rows "
                          "never overwrite the tracked trajectory")
     args = ap.parse_args()
     if args.json is None:
         args.json = ("bench_smoke.json" if os.environ.get("REPRO_BENCH_SMOKE")
-                     else "BENCH_PR9.json")
+                     else "BENCH_PR10.json")
     names = (args.only.split(",") if args.only else list(SUITES))
     header()
     t0 = time.perf_counter()

@@ -40,6 +40,7 @@ import numpy as np
 from repro.ft import faults as ft_faults
 
 from .edge import BY_SRC, AdjacencyTable
+from .encoding import hull_intersects
 from .labels import intervals_to_ids
 from .partition import live_partitions
 from .table import DeltaIntColumn
@@ -242,10 +243,13 @@ class DeltaSegments:
                    ) -> np.ndarray:
         """Sorted unique pending neighbor ids of the batch.
 
-        ``qual`` -- a predicate's qualifying ``(lo, hi)`` id hull (see
-        ``LabelFilter.qual_range``) -- prunes whole segments whose zone
-        map cannot intersect it; surviving ids still need the caller's
-        exact filter.  Pruning is counted in ``segments_pruned``.
+        ``qual`` -- a predicate's half-open qualifying ``[lo, hi)`` id
+        hull (see ``LabelFilter.qual_range``) -- prunes whole segments
+        whose zone map cannot intersect it (the shared
+        :func:`repro.core.encoding.hull_intersects`, same predicate as
+        partition and page pruning); surviving ids still need the
+        caller's exact filter.  Pruning is counted in
+        ``segments_pruned``.
         """
         vs = np.asarray(vs, np.int64)
         self.lookups += 1
@@ -254,8 +258,8 @@ class DeltaSegments:
         out: List[np.ndarray] = []
         owner = self._part_of_keys(vs)
         for p, seg in self.segments.items():
-            if qual is not None and (seg.vmax < qual[0]
-                                     or seg.vmin > qual[1]):
+            if qual is not None and not hull_intersects(
+                    seg.vmin, seg.vmax, qual[0], qual[1]):
                 self.segments_pruned += 1
                 continue
             sel = vs[owner == p]

@@ -440,6 +440,27 @@ class PackedPages:
 
 
 @dataclasses.dataclass
+class PagePruneStats:
+    """Counters for page-granular statistics pushdown on one column.
+
+    ``io_saved_bytes`` sums the physical :meth:`DeltaPage.nbytes` of the
+    pages a qualifying hull eliminated -- an upper bound on the lake I/O
+    avoided (a pruned page may also have been a decoded-LRU hit, in
+    which case the avoided cost is the decode, not the bytes)."""
+
+    dispatches: int = 0
+    pages_considered: int = 0
+    pages_pruned: int = 0
+    io_saved_bytes: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return {"dispatches": self.dispatches,
+                "pages_considered": self.pages_considered,
+                "pages_pruned": self.pages_pruned,
+                "io_saved_bytes": self.io_saved_bytes}
+
+
+@dataclasses.dataclass
 class DeltaColumn:
     count: int
     page_size: int
@@ -465,6 +486,14 @@ class DeltaColumn:
     #: (keyed on ``(version, partitions)``); not part of the storage
     #: format.
     partition_cache: "object | None" = dataclasses.field(
+        default=None, repr=False, compare=False)
+    #: page-granular statistics-pushdown counters (see
+    #: :func:`prune_page_list`); observability only, never keyed on.
+    prune_stats: PagePruneStats = dataclasses.field(
+        default_factory=PagePruneStats, repr=False, compare=False)
+    #: lazily built per-page hull arrays (see :func:`page_hulls`), keyed
+    #: on ``(n_pages, version)`` like :attr:`packed_cache`.
+    _hull_cache: "Tuple | None" = dataclasses.field(
         default=None, repr=False, compare=False)
 
     def nbytes(self) -> int:
@@ -545,6 +574,82 @@ def pack_column(col: DeltaColumn) -> PackedPages:
     col.packed_cache = build_packed(col.pages, col.page_size,
                                     version=col.version)
     return col.packed_cache
+
+
+def hull_intersects(vmin: int, vmax: int, lo: int, hi: int) -> bool:
+    """Whether a closed value hull ``[vmin, vmax]`` can intersect the
+    half-open qualifying range ``[lo, hi)``.
+
+    The single intersection predicate behind all three statistics-pushdown
+    granularities -- partition hulls (``partition.Partition
+    .intersects_range``), page zone maps (:func:`prune_page_list`, the
+    vectorized form), and delta-segment hulls
+    (``delta_segment.DeltaSegments.unique_ids``).  An empty value hull
+    (``vmax < vmin``) intersects nothing; an empty qualifying range
+    (``hi <= lo``) is intersected by nothing."""
+    return vmax >= vmin and hi > lo and vmin < hi and vmax >= lo
+
+
+def page_hulls(col: DeltaColumn) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-page value hulls ``(pmin, pmax, prunable)`` for zone-map pruning.
+
+    ``prunable[p]`` is True when page ``p``'s encode-time statistics are
+    trustworthy: a non-empty hull (``vmax >= vmin``) or a provably empty
+    page.  Pages with unknown stats (hand-built :class:`DeltaPage` objects
+    that skipped the encoder, or a sentinel hull on non-empty data) are
+    never pruned.  Cached on the column, keyed on ``(n_pages, version)``
+    like :func:`pack_column`, and cheap enough to build eagerly -- it
+    reads only the page headers, no packed words."""
+    key = (len(col.pages), col.version)
+    cached = col._hull_cache
+    if cached is not None and cached[0] == key:
+        return cached[1]
+    n = len(col.pages)
+    pmin = np.zeros(n, np.int64)
+    pmax = np.full(n, -1, np.int64)
+    counts = np.zeros(n, np.int64)
+    for i, pg in enumerate(col.pages):
+        pmin[i], pmax[i] = pg.vmin, pg.vmax
+        counts[i] = pg.count
+    prunable = (pmax >= pmin) | (counts == 0)
+    hulls = (pmin, pmax, prunable)
+    col._hull_cache = (key, hulls)
+    return hulls
+
+
+def prune_page_list(col: DeltaColumn, pages: np.ndarray,
+                    qual: "Tuple[int, int] | None"
+                    ) -> Tuple[np.ndarray, "np.ndarray | None"]:
+    """Drop pages whose value hull cannot intersect the half-open
+    qualifying range ``qual = [lo, hi)``.
+
+    Returns ``(kept_pages, mask)`` where ``mask`` is the boolean keep
+    mask over the input list, or ``None`` when nothing pruned (the
+    allocation-free fast path -- callers skip their row-drop logic).
+    Pages with unknown statistics are always kept, so pruning can only
+    remove pages that provably contain no qualifying value: result ids
+    stay bit-identical to the unpruned oracle.  Counters accumulate on
+    ``col.prune_stats``; ``io_saved_bytes`` only counts actually-pruned
+    dispatches."""
+    pages = np.asarray(pages, np.int64)
+    if qual is None or len(pages) == 0:
+        return pages, None
+    lo, hi = qual
+    stats = col.prune_stats
+    stats.dispatches += 1
+    stats.pages_considered += len(pages)
+    pmin, pmax, prunable = page_hulls(col)
+    if hi <= lo:
+        keep = ~prunable[pages]
+    else:
+        pmn, pmx = pmin[pages], pmax[pages]
+        keep = ~prunable[pages] | ((pmx >= pmn) & (pmx >= lo) & (pmn < hi))
+    if keep.all():
+        return pages, None
+    dropped = pages[~keep]
+    stats.pages_pruned += len(dropped)
+    stats.io_saved_bytes += int(sum(col.pages[p].nbytes() for p in dropped))
+    return pages[keep], keep
 
 
 def delta_encode_column(values: np.ndarray,

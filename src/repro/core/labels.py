@@ -33,11 +33,23 @@ from typing import Callable, Dict, List, Sequence, Tuple
 
 import numpy as np
 
-from .encoding import RleColumn
+from .encoding import RleColumn, hull_intersects  # noqa: F401 (re-export)
 from .pac import PAC
 from .vertex import VertexTable, label_col_name
 
 Intervals = Tuple[np.ndarray, np.ndarray]  # (starts, ends), half-open
+
+
+def interval_hull(starts, ends) -> Tuple[int, int]:
+    """Half-open hull ``[lo, hi)`` of a sorted interval list.
+
+    The one home for the qualifying-hull derivation shared by the label
+    plane (``FilterPlan.qual_range``), the numeric plane
+    (:mod:`repro.core.numeric`), and their consumers -- ``(0, 0)`` when
+    nothing qualifies (everything prunes; no id can pass)."""
+    return (int(starts[0]), int(ends[-1])) if len(starts) else (0, 0)
+
+
 
 
 # --------------------------------------------------------------------------
@@ -141,27 +153,39 @@ class CondProgram:
     arrays at merged-run representatives, uint32 bitmap words, or jnp
     planes inside a kernel all evaluate the same program.  Frozen/hashable
     so kernels can specialize on it as a static argument.
+
+    ``labels`` entries are strings for label leaves; numeric predicates
+    (:mod:`repro.core.numeric`) store their frozen comparison leaves
+    instead -- consumers that resolve labels by name only ever see
+    label programs.
     """
 
-    labels: Tuple[str, ...]
+    labels: Tuple
     ops: Tuple[Tuple, ...]
 
 
 def compile_cond(cond: Cond) -> CondProgram:
     """Compile a condition tree into a :class:`CondProgram` (iterative
-    postorder walk; the only tree traversal left in the plane)."""
+    postorder walk; the only tree traversal left in the plane).
+
+    Leaves are label references (:class:`L`, keyed by name) or any node
+    exposing a hashable ``leaf_key()`` -- the numeric comparison leaves
+    of :mod:`repro.core.numeric` compile through the same program, so
+    one stack machine evaluates label and numeric predicates alike."""
     if isinstance(cond, CondProgram):
         return cond
-    labels: List[str] = []
-    index: Dict[str, int] = {}
+    labels: List = []
+    index: Dict = {}
     ops: List[Tuple] = []
     stack: List[Tuple[Cond, bool]] = [(cond, False)]
     while stack:
         node, visited = stack.pop()
-        if isinstance(node, L):
-            i = index.setdefault(node.name, len(labels))
+        key = (node.name if isinstance(node, L)
+               else node.leaf_key() if hasattr(node, "leaf_key") else None)
+        if key is not None:
+            i = index.setdefault(key, len(labels))
             if i == len(labels):
-                labels.append(node.name)
+                labels.append(key)
             ops.append((OP_LEAF, i))
         elif visited:
             ops.append((OP_NOT,) if isinstance(node, Not)

@@ -62,27 +62,42 @@ def _kernel_column(adj: AdjacencyTable):
 
 
 def decode_edge_ranges(adj: AdjacencyTable, los, his, meter=None,
-                       engine: str = "numpy") -> np.ndarray:
+                       engine: str = "numpy", qual=None) -> np.ndarray:
     """Concatenated neighbor IDs over many edge-row ranges (multiplicity
     preserved), decoding the deduplicated page set once.
 
     This is the shared multi-range primitive under every batched consumer
     (IC-8 hop fan-out, BI-2 interval ranges, k-hop frontiers, serving).
+
+    ``qual`` -- a predicate's half-open qualifying ``[lo, hi)`` id hull
+    -- enables page-granular statistics pushdown: pages whose zone map
+    cannot intersect it are neither decoded nor charged, and their rows
+    (all of which fail the predicate) are dropped from the output.  Only
+    callers that go on to filter by that predicate may pass it.  The
+    numpy engine then routes through the kernel layer's pruning decode
+    (engine-dispatched to the numpy oracle) so accounting stays
+    identical across engines by construction.
     """
     if engine != "numpy" and _mirror_poisoned(adj):
         engine = "numpy"  # poisoned device mirror: host oracle decodes
     if engine == "numpy":
-        return np.asarray(
-            adj.table[adj.value_col].read_rows_concat(los, his, meter),
-            np.int64)
+        if qual is None or not isinstance(adj.table[adj.value_col],
+                                          DeltaIntColumn):
+            return np.asarray(
+                adj.table[adj.value_col].read_rows_concat(los, his, meter),
+                np.int64)
+        from repro.kernels.pac_decode import ops as pac_ops
+        return pac_ops.decode_row_ranges(_kernel_column(adj), los, his,
+                                         meter=meter, engine="numpy",
+                                         qual=qual)
     from repro.kernels.pac_decode import ops as pac_ops
     return pac_ops.decode_row_ranges(_kernel_column(adj), los, his,
-                                     meter=meter, engine=engine)
+                                     meter=meter, engine=engine, qual=qual)
 
 
 def neighbor_ids_batch(adj: AdjacencyTable, vs, meter=None,
                        engine: str = "numpy",
-                       unique: bool = True) -> np.ndarray:
+                       unique: bool = True, qual=None) -> np.ndarray:
     """Neighbor IDs of a whole batch of vertices.
 
     One vectorized offsets gather + one multi-range decode; duplicate
@@ -94,14 +109,21 @@ def neighbor_ids_batch(adj: AdjacencyTable, vs, meter=None,
     so every consumer -- the k-hop host loops included -- sees ingested
     edges immediately; delta reads are RAM-resident and charge no lake
     I/O.  The merged per-vertex lists equal a from-scratch rebuild's.
+
+    ``qual`` (unique mode only) pushes a predicate's qualifying hull down
+    for statistics pruning -- base pages *and* delta segments outside it
+    are skipped; ids that survive still need the caller's exact filter.
+    The non-unique merge path never prunes: its per-vertex alignment
+    requires every row.
     """
     los, his = adj.edge_ranges_batch(vs, meter)
-    ids = decode_edge_ranges(adj, los, his, meter, engine)
+    ids = decode_edge_ranges(adj, los, his, meter, engine,
+                             qual=qual if unique else None)
     delta = live_delta(adj)
     if delta is None:
         return np.unique(ids) if unique else ids
     if unique:
-        return np.union1d(ids, delta.unique_ids(vs))
+        return np.union1d(ids, delta.unique_ids(vs, qual))
     dvals, dlens = delta.lookup_batch(vs)
     lengths = np.maximum(his - los, 0)
     # per-vertex sorted merge of (base rows, delta rows) -- exactly the
@@ -164,7 +186,8 @@ def retrieve_neighbors_batch(adj: AdjacencyTable, vs,
     if engine != "numpy" and _mirror_poisoned(adj):
         engine = "numpy"  # graceful degradation: host oracle serves
     if engine == "numpy":
-        ids = decode_edge_ranges(adj, los, his, meter, engine)
+        qual = filter.qual_range() if filter is not None else None
+        ids = decode_edge_ranges(adj, los, his, meter, engine, qual=qual)
         pac = PAC.from_ids(np.unique(ids), target_page_size) \
             if ids.size else PAC(target_page_size)
         if filter is not None:
@@ -347,7 +370,9 @@ def k_hop(adj: AdjacencyTable, seeds: np.ndarray, hops: int,
                 break
             if filts[h] is not None:
                 filts[h].charge(meter)
-            nbrs = neighbor_ids_batch(adj, frontier, meter, engine=engine)
+            nbrs = neighbor_ids_batch(
+                adj, frontier, meter, engine=engine,
+                qual=filts[h].qual_range() if filts[h] is not None else None)
             if filts[h] is not None and nbrs.size:
                 nbrs = nbrs[filts[h].mask_ids(nbrs, engine)]
             frontier = np.setdiff1d(nbrs, seen, assume_unique=True)
@@ -365,7 +390,9 @@ def k_hop(adj: AdjacencyTable, seeds: np.ndarray, hops: int,
             break
         if filts[h] is not None:
             filts[h].charge(meter)
-        nbrs = neighbor_ids_batch(adj, frontier, meter, engine=engine)
+        nbrs = neighbor_ids_batch(
+            adj, frontier, meter, engine=engine,
+            qual=filts[h].qual_range() if filts[h] is not None else None)
         if filts[h] is not None and nbrs.size:
             nbrs = nbrs[filts[h].mask_ids(nbrs, engine)]
         frontier = nbrs[~visited[nbrs]]

@@ -48,7 +48,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .encoding import DeltaColumn, PackedPages, build_packed
+from .encoding import DeltaColumn, PackedPages, build_packed, hull_intersects
 
 #: sharded-retrieval default: ``REPRO_PARTITIONS=N`` partitions every
 #: column the retrieval plane packs (0 / unset keeps the monolithic
@@ -94,11 +94,13 @@ class Partition:
 
         An unknown hull (``stats_known=False``) conservatively intersects
         everything -- pruning is an optimization and may only ever fire
-        on hard evidence."""
+        on hard evidence.  The intersection predicate itself is the
+        shared :func:`repro.core.encoding.hull_intersects` (one
+        definition across partition, page, and delta-segment
+        granularities)."""
         if not self.stats_known:
             return True
-        return self.vmax >= self.vmin and hi > lo \
-            and self.vmin < hi and self.vmax >= lo
+        return hull_intersects(self.vmin, self.vmax, lo, hi)
 
 
 def partition_bounds(n_pages: int, n_parts: int) -> np.ndarray:

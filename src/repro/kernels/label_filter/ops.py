@@ -22,7 +22,8 @@ import jax.numpy as jnp
 
 from repro.core.labels import (Cond, CondProgram, Intervals,
                                bitmap_to_intervals, charge_label_metadata,
-                               compile_cond, intervals_to_bitmap,
+                               compile_cond, interval_hull,
+                               intervals_to_bitmap,
                                program_filter_intervals)
 from repro.core.pac import PAC
 from repro.core.vertex import VertexTable
@@ -92,9 +93,8 @@ class FilterPlan:
         partition prunes -- correct: no id can pass the predicate).
         """
         if self._qual is None:
-            starts, ends = program_filter_intervals(self.vt, self.program)
-            self._qual = ((int(starts[0]), int(ends[-1]))
-                          if starts.size else (0, 0))
+            self._qual = interval_hull(
+                *program_filter_intervals(self.vt, self.program))
         return self._qual
 
     def device(self, engine: str) -> Tuple:

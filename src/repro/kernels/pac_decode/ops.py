@@ -35,7 +35,8 @@ from typing import Dict, Optional, Sequence, Tuple
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.encoding import DeltaColumn, delta_decode_page, pack_column
+from repro.core.encoding import (DeltaColumn, delta_decode_page, pack_column,
+                                 prune_page_list)
 from repro.core.labels import intervals_to_ids
 from repro.core.pac import PAC
 from repro.core.page_cache import live_cache, miss_runs
@@ -419,7 +420,7 @@ def page_set_for_ranges(los: np.ndarray, his: np.ndarray, page_size: int
 
 
 def decode_row_ranges(col: DeltaColumn, los, his, meter=None,
-                      engine: str = "pallas") -> np.ndarray:
+                      engine: str = "pallas", qual=None) -> np.ndarray:
     """Concatenated rows over many [lo, hi) ranges, one decode dispatch.
 
     The deduplicated page set is decoded **once** (numpy / jnp ref /
@@ -427,6 +428,14 @@ def decode_row_ranges(col: DeltaColumn, los, his, meter=None,
     cache-miss page's bytes charged once, requests counted per contiguous
     miss run), then every output element is gathered from the decoded
     page matrix.
+
+    ``qual`` -- a predicate's half-open qualifying ``[lo, hi)`` id hull
+    -- drops pages whose zone map cannot intersect it **before** the
+    cache split and the decode (:func:`~repro.core.encoding
+    .prune_page_list`): pruned pages are never gathered, decoded, or
+    charged, and the rows they held are dropped from the output (every
+    one of them provably fails the predicate, so callers that filter by
+    ``qual``'s predicate see bit-identical ids).
     """
     los = np.asarray(los, np.int64)
     his = np.asarray(his, np.int64)
@@ -436,17 +445,26 @@ def decode_row_ranges(col: DeltaColumn, los, his, meter=None,
         return np.zeros(0, np.int64)
     ps = col.page_size
     pages, _ = page_set_for_ranges(los, his, ps)
+    pages, pmask = prune_page_list(col, pages, qual)
+    if len(pages) == 0:
+        return np.zeros(0, np.int64)
     mat = decode_page_list(col, pages, engine, meter=meter)
     # absolute row index of every output element
     rows = intervals_to_ids((los, his))
     page_of = rows // ps
     pidx = np.searchsorted(pages, page_of)
+    if pmask is not None:
+        # rows addressed at a pruned page cannot pass the predicate
+        ok = pidx < len(pages)
+        ok &= pages[np.minimum(pidx, len(pages) - 1)] == page_of
+        rows, page_of, pidx = rows[ok], page_of[ok], pidx[ok]
     return mat[pidx, rows - page_of * ps]
 
 
 def _gather_positions(pages: np.ndarray, base_of_page: np.ndarray,
                       los: np.ndarray, his: np.ndarray,
-                      page_size: int) -> Tuple[np.ndarray, int]:
+                      page_size: int, pruned: bool = False
+                      ) -> Tuple[np.ndarray, int]:
     """Flat (row * page_size + offset) position of every requested row,
     zero-padded to a power of two.
 
@@ -455,14 +473,28 @@ def _gather_positions(pages: np.ndarray, base_of_page: np.ndarray,
     kernel's [miss | cached] row order (``base_of_page[i]`` is the matrix
     row holding sorted page ``pages[i]``) without ever materializing the
     concatenated id list.  Returns ``(int32[t], total)``.
+
+    ``pruned`` marks a statistics-pruned ``pages`` list: rows whose page
+    was dropped are dropped with it (they cannot pass the predicate that
+    derived the pruning hull).
     """
     rows = intervals_to_ids((los, his))
-    total = len(rows)
+    n_rows = len(rows)
     page_of = rows // page_size
     pidx = np.searchsorted(pages, page_of)
+    if pruned:
+        ok = pidx < len(pages)
+        ok &= pages[np.minimum(pidx, len(pages) - 1)] == page_of
+        if not ok.all():
+            rows, page_of, pidx = rows[ok], page_of[ok], pidx[ok]
+    total = len(rows)
     gidx = (base_of_page[pidx] * page_size + (rows - page_of * page_size)) \
         .astype(np.int32)
-    pad = size_class(total, RANGE_CLASS_MIN) - total
+    # pad to the *unpruned* request's size class: pruning must never mint
+    # a new staged shape (the dropped rows ride out as masked padding
+    # lanes under ``total``), so the jit-cache footprint is exactly the
+    # unpruned path's
+    pad = size_class(n_rows, RANGE_CLASS_MIN) - total
     if pad:
         gidx = np.concatenate([gidx, np.zeros(pad, np.int32)])
     return gidx, total
@@ -517,6 +549,16 @@ def _retrieve_pac_batch_sharded(col: DeltaColumn, parts, los, his, pages,
         pages = pages[mask]
         if pages.size == 0:  # every partition statistics-pruned
             return PAC(target_page_size)
+    # page-granular zone maps inside the surviving partitions: a finer
+    # sieve over the same hull (partition-pruned pages are a subset of
+    # page-pruned ones, so the final page set -- and the meter -- equals
+    # the monolithic path's at any partition count)
+    kept, pmask = prune_page_list(col, pages, qual)
+    if pmask is not None:
+        pages, owner = kept, owner[pmask]
+        if pages.size == 0:  # every page statistics-pruned
+            return PAC(target_page_size)
+    pruned = mask is not None or pmask is not None
     stack_idx = _stack_index(parts, pages, owner)
     cache = live_cache(col)
     if cache is None:
@@ -529,9 +571,10 @@ def _retrieve_pac_batch_sharded(col: DeltaColumn, parts, los, his, pages,
     # requested rows: with statistics pruning, rows whose page was
     # dropped cannot pass the predicate and are dropped with it
     rows = intervals_to_ids((los, his))
+    n_rows = len(rows)
     page_of = rows // ps
     pidx = np.searchsorted(pages, page_of)
-    if mask is not None:
+    if pruned:
         ok = pidx < len(pages)
         ok &= pages[np.minimum(pidx, len(pages) - 1)] == page_of
         if not ok.all():
@@ -543,7 +586,9 @@ def _retrieve_pac_batch_sharded(col: DeltaColumn, parts, los, his, pages,
         arrays, _ = parts.device_plan_single(engine)
         gidx = (pidx * ps + (rows - page_of * ps)).astype(np.int32)
         total = len(gidx)
-        pad = size_class(total, RANGE_CLASS_MIN) - total
+        # pad to the unpruned request's class -- pruning never mints a
+        # new staged shape (see _gather_positions)
+        pad = size_class(n_rows, RANGE_CLASS_MIN) - total
         if pad:
             gidx = np.concatenate([gidx, np.zeros(pad, np.int32)])
         p_pad = _page_class(len(pages), parts.stack_rows)
@@ -675,6 +720,15 @@ def _retrieve_pac_batch_fused(col: DeltaColumn, los, his,
         return _retrieve_pac_batch_sharded(col, parts, los, his, pages,
                                            target_page_size, num_targets,
                                            meter, engine, filter_plan)
+    # page-granular statistics pushdown: with a predicate pushed down,
+    # pages whose zone map cannot intersect its qualifying hull drop out
+    # *before* the cache split and the staging -- never gathered onto
+    # the device, never decoded, never charged (the sharded path above
+    # applies the same sieve after its partition-level prune)
+    qual = filter_plan.qual_range() if filter_plan is not None else None
+    pages, pmask = prune_page_list(col, pages, qual)
+    if pages.size == 0:  # every page statistics-pruned
+        return PAC(target_page_size)
     cache = live_cache(col)
     part_of = {}
     if cache is None:
@@ -694,7 +748,8 @@ def _retrieve_pac_batch_fused(col: DeltaColumn, los, his,
     if resident:
         # rows are in sorted-page order: base_of_page[i] == i
         gidx, total = _gather_positions(pages, np.arange(len(pages)),
-                                        los, his, ps)
+                                        los, his, ps,
+                                        pruned=pmask is not None)
         plan = pack_column(col).device_plan(engine)
         # one staging vector [idx | gidx | total] = one device put per
         # dispatch (three separate puts were a measurable fixed cost);
@@ -755,7 +810,8 @@ def _retrieve_pac_batch_fused(col: DeltaColumn, los, his,
                           len(pages))
     base_of_page = np.where(is_miss, np.cumsum(is_miss) - 1,
                             m_pad + np.cumsum(~is_miss) - 1)
-    gidx, total = _gather_positions(pages, base_of_page, los, his, ps)
+    gidx, total = _gather_positions(pages, base_of_page, los, his, ps,
+                                    pruned=pmask is not None)
     jargs = [jnp.asarray(a) for a in args] \
         + [jnp.asarray(cached), jnp.asarray(gidx),
            jnp.full((1, 1), total, np.int32)]
@@ -837,7 +893,12 @@ def retrieve_pac_batch(col: DeltaColumn, los, his, target_page_size: int,
                                         int(num_targets), meter, engine,
                                         plan, resident=resident)
     else:
-        ids = decode_row_ranges(col, los, his, meter, engine)
+        # non-fused oracle: the same page-granular pruning hull applies
+        # (pruned pages hold no qualifying ids, and the intersect below
+        # removes exactly those ids on the unpruned path), so meters
+        # agree with the fused dispatches bit for bit
+        qual = label_filter.qual_range() if label_filter is not None else None
+        ids = decode_row_ranges(col, los, his, meter, engine, qual=qual)
         pac = PAC.from_ids(np.unique(ids), target_page_size) if ids.size \
             else PAC(target_page_size)
         if label_filter is not None:

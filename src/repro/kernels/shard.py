@@ -6,7 +6,10 @@ partitioned column's stacked unpack plan is sharded partition-major
 across the mesh (``PartitionedColumn.device_plan``), the host buckets
 each dispatch's page-index / row-position vectors per device into one
 ``staged`` matrix (row ``i`` = device ``i``'s ``[idx | gidx | total]``
-vector, the same one-put layout as the monolithic resident path), and
+vector, the same one-put layout as the monolithic resident path --
+under a pushed-down predicate those vectors arrive already statistics-
+pruned: partition hulls first, then per-page zone maps, so pruned
+pages never appear in any shard's staged block), and
 ``shard_map`` runs the per-shard body -- gather, decode, sorted-scatter
 bitmap, optional resident-filter AND -- on every device concurrently.
 Each shard emits a full ``[n_words]`` bitmap plane over the target id

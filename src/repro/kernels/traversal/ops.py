@@ -37,7 +37,7 @@ from typing import Dict, Sequence, Tuple
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.encoding import DeltaColumn
+from repro.core.encoding import DeltaColumn, prune_page_list
 from repro.core.frontier import Frontier
 from repro.core.pac import PAC
 from repro.core.page_cache import live_cache
@@ -242,13 +242,15 @@ def _seed_vector(seeds: np.ndarray, sentinel: int) -> np.ndarray:
 
 
 def _charge_ranges(col: DeltaColumn, plan: TraversalPlan,
-                   los, his, meter, cache, parts) -> None:
+                   los, his, meter, cache, parts, qual=None) -> None:
     """Replay the page I/O of decoding ``[los, his)`` exactly as the
-    host oracle incurs it: LRU split, miss-page charge (bytes once,
-    requests per contiguous run), cache backfill from the plan's host
-    decode."""
+    host oracle incurs it: page-granular statistics pruning against the
+    hop predicate's qualifying hull ``qual``, LRU split, miss-page
+    charge (bytes once, requests per contiguous run), cache backfill
+    from the plan's host decode."""
     ps = col.page_size
     pages, _ = pac_ops.page_set_for_ranges(los, his, ps)
+    pages, _ = prune_page_list(col, pages, qual)
     if not len(pages):
         return
     owner = parts.part_of_pages(pages) if parts is not None else None
@@ -265,10 +267,12 @@ def _charge_ranges(col: DeltaColumn, plan: TraversalPlan,
 
 
 def _charge_expansion(adj, col: DeltaColumn, plan: TraversalPlan,
-                      ids: np.ndarray, meter, cache, parts) -> None:
-    """One hop's oracle I/O: offsets gather + value-page charges."""
+                      ids: np.ndarray, meter, cache, parts,
+                      qual=None) -> None:
+    """One hop's oracle I/O: offsets gather + value-page charges
+    (zone-map-pruned by the hop predicate's hull, like the oracle's)."""
     los, his = adj.edge_ranges_batch(ids, meter)
-    _charge_ranges(col, plan, los, his, meter, cache, parts)
+    _charge_ranges(col, plan, los, his, meter, cache, parts, qual=qual)
 
 
 def _shard_width(parts) -> int:
@@ -352,7 +356,9 @@ def k_hop_fused(adj, seeds, hops: int, filts: Sequence, meter=None,
                 break
             if filts[h] is not None:
                 filts[h].charge(meter)
-            _charge_expansion(adj, col, plan, ids, meter, cache, parts)
+            _charge_expansion(
+                adj, col, plan, ids, meter, cache, parts,
+                qual=filts[h].qual_range() if filts[h] is not None else None)
             if h + 1 < hops:
                 if planes_host is None:
                     planes_host = np.asarray(planes)
@@ -412,7 +418,9 @@ def two_hop_pac(adj_a, adj_b, seeds, target_page_size: int, filt=None,
         created = np.flatnonzero(np.asarray(mid)).astype(np.int64)
         if created.size:
             _charge_expansion(adj_b, col_b, plan_b, created, meter,
-                              cache_b, live_partitions(col_b))
+                              cache_b, live_partitions(col_b),
+                              qual=filt.qual_range()
+                              if filt is not None else None)
     return PAC.from_dense_bitmap(np.asarray(words), target_page_size)
 
 

@@ -317,6 +317,9 @@ class GraphRetriever:
             s["filter"] = {"cond": repr(self.label_filter.cond),
                            "considered": self.filter_considered,
                            "kept": self.filter_kept}
+        pruning = self._pruning_stats()
+        if pruning is not None:
+            s["pruning"] = pruning
         from repro.kernels.traversal.ops import traversal_stats
         trav = traversal_stats(self.adj)
         if trav is not None:
@@ -327,3 +330,26 @@ class GraphRetriever:
             trav["deep_pool_last"] = self.deep_pool_last
             s["traversal"] = trav
         return s
+
+    def _pruning_stats(self) -> "Dict[str, object] | None":
+        """The statistics-pushdown plane's three granularities in one
+        section: partition hulls skipped whole partitions
+        (``partitions_stats_pruned``), page zone maps dropped individual
+        pages before staging (``pages_*`` / ``io_saved_bytes``), and the
+        mutable plane's segment zone maps skipped pending-row segments
+        (``delta_segments_pruned``).  ``None`` until a predicate pushes
+        down."""
+        if self._cache_col is None:
+            return None
+        out: Dict[str, object] = \
+            dict(self._cache_col.encoded.prune_stats.as_dict())
+        from repro.core.partition import live_partitions
+        parts = live_partitions(self._cache_col.encoded)
+        out["partitions_stats_pruned"] = \
+            parts.stats_pruned if parts is not None else 0
+        delta = getattr(self.adj, "delta", None)
+        out["delta_segments_pruned"] = \
+            delta.segments_pruned if delta is not None else 0
+        if not any(out.values()):
+            return None
+        return out

@@ -1,0 +1,328 @@
+"""Page-granular statistics pushdown (PR 10).
+
+A predicate's qualifying-id hull intersects per-page min/max zone maps
+at plan time, dropping pages from the deduplicated page list *before*
+staging -- pruned pages are never gathered, decoded, or charged.  The
+invariants pinned here:
+
+* pruned retrieval ids are bit-identical to the unpruned oracle, across
+  engines x partition counts x label and numeric predicates (the fuzz
+  test), and the three granularities (partition hull -> page zone map
+  -> delta segment) compose without double-dropping;
+* IOMeter bytes are <= the unpruned cost, and exactly equal when no
+  page prunes;
+* numeric predicates (:class:`repro.core.numeric.NumericFilter`) push
+  down through every path the label plane serves;
+* pruning ships as shorter staged vectors under the existing pow2
+  padding ladder -- steady-state dispatches never retrace.
+"""
+import numpy as np
+import pytest
+from _engines import engines
+from _hypothesis_shim import given, settings, st
+
+from repro.core import (BY_SRC, ENC_GRAPHAR, IOMeter, L, LabelFilter,
+                        NumericFilter, NumProp, VertexTable,
+                        build_adjacency, k_hop, live_partitions,
+                        partition_column, retrieve_neighbors_batch)
+from repro.core.encoding import page_hulls, prune_page_list
+from repro.core.schema import PropertySchema, VertexTypeSchema
+
+N = 1024
+PAGE = 128
+TPS = 256
+DEG = 6
+PART_COUNTS = (1, 2, 8)
+
+
+def _local_graph():
+    """Community-local ring: dst pages have tight id hulls, so selective
+    predicates prune most of the page set."""
+    off = np.concatenate([np.arange(-(DEG // 2), 0),
+                          np.arange(1, DEG - DEG // 2 + 1)])
+    dst = np.clip(np.arange(N)[:, None] + off[None, :], 0, N - 1).ravel()
+    src = np.repeat(np.arange(N), DEG)
+    return build_adjacency(src, dst, N, N, BY_SRC, ENC_GRAPHAR,
+                           page_size=PAGE)
+
+
+def _vt():
+    rng = np.random.default_rng(3)
+    age = (np.arange(N) // 4).astype(np.int64)       # id-correlated
+    score = rng.integers(0, 50, N).astype(np.int64)  # uncorrelated
+    labels = {"A": np.arange(N) < N // 6,            # tight hull
+              "R": rng.random(N) < 0.4,              # wide hull
+              "Z": np.zeros(N, bool)}                # empty hull
+    return VertexTable.build(
+        VertexTypeSchema("v", [PropertySchema("age", "int64"),
+                               PropertySchema("score", "int64")],
+                         labels=["A", "R", "Z"], page_size=PAGE),
+        {"age": age, "score": score}, labels, num_vertices=N)
+
+
+@pytest.fixture(scope="module")
+def adj():
+    return _local_graph()
+
+
+@pytest.fixture(scope="module")
+def vt():
+    return _vt()
+
+
+AGE = NumProp("age")
+SCORE = NumProp("score")
+
+
+def _predicate(vt, kind: int, rng):
+    """One random predicate from the label / numeric pools."""
+    if kind % 2 == 0:
+        conds = [L("A"), L("R"), L("A") | L("R"), ~L("A"),
+                 L("A") & ~L("R"), ~L("Z")]
+        return LabelFilter(vt, conds[kind // 2 % len(conds)])
+    lo = int(rng.integers(0, N // 4))
+    w = int(rng.integers(1, N // 8))
+    conds = [AGE.between(lo, lo + w), AGE >= lo, AGE < lo + w,
+             AGE.between(lo, lo + w) | (AGE == 2 * lo + 7),
+             ~(AGE < lo), AGE.between(lo, lo + w) & (SCORE >= 10)]
+    return NumericFilter(vt, conds[kind // 2 % len(conds)])
+
+
+# --------------------------- the property fuzz ----------------------------
+
+@given(st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=0, max_value=23))
+@settings(max_examples=12, deadline=None)
+def test_pruned_retrieval_bit_identical_and_never_costlier(seed, kind):
+    adj = _local_graph()
+    vt = _vt()
+    col = adj.table[adj.value_col].encoded
+    rng = np.random.default_rng(seed)
+    filt = _predicate(vt, kind, rng)
+    vs = np.sort(rng.choice(N, int(rng.integers(1, 200)), replace=False))
+    # unpruned oracle: unfiltered retrieval intersected host-side, its
+    # meter + the filter's charge = the pre-pushdown filtered cost
+    m_un = IOMeter()
+    want = retrieve_neighbors_batch(adj, vs, TPS, m_un) \
+        .intersect(filt.pac(TPS))
+    filt.charge(m_un)
+    base = None
+    for parts in PART_COUNTS:
+        if parts > 1:
+            partition_column(col, parts)
+        pobj = live_partitions(col)
+        for engine in engines():
+            m = IOMeter()
+            pg_before = col.prune_stats.pages_pruned
+            pt_before = pobj.stats_pruned if pobj is not None else 0
+            got = retrieve_neighbors_batch(adj, vs, TPS, m, engine,
+                                           filter=filt)
+            np.testing.assert_array_equal(got.to_ids(), want.to_ids())
+            assert m.nbytes <= m_un.nbytes
+            pruned_any = (
+                col.prune_stats.pages_pruned > pg_before
+                or (pobj is not None and pobj.stats_pruned > pt_before))
+            if not pruned_any:
+                # nothing pruned at either granularity: pushdown must
+                # cost exactly the oracle
+                assert (m.nbytes, m.nrequests) \
+                    == (m_un.nbytes, m_un.nrequests)
+            if base is None:
+                base = (m.nbytes, m.nrequests)
+            else:  # identical across engines AND partition counts
+                assert (m.nbytes, m.nrequests) == base
+
+
+# ------------------------ deterministic invariants ------------------------
+
+@pytest.mark.parametrize("engine", engines())
+def test_selective_filter_prunes_pages_and_bytes(adj, vt, engine):
+    col = adj.table[adj.value_col].encoded
+    vs = np.arange(0, N, 3)
+    filt = LabelFilter(vt, L("A"))
+    m_un, m = IOMeter(), IOMeter()
+    retrieve_neighbors_batch(adj, vs, TPS, m_un)
+    filt.charge(m_un)
+    before = col.prune_stats.as_dict()
+    got = retrieve_neighbors_batch(adj, vs, TPS, m, engine, filter=filt)
+    after = col.prune_stats.as_dict()
+    assert after["pages_pruned"] > before["pages_pruned"]
+    assert after["io_saved_bytes"] > before["io_saved_bytes"]
+    assert m.nbytes < m_un.nbytes
+    want = retrieve_neighbors_batch(adj, vs, TPS).intersect(filt.pac(TPS))
+    assert got == want
+
+
+@pytest.mark.parametrize("engine", engines())
+def test_all_true_filter_costs_exactly_the_oracle(adj, vt, engine):
+    # full qualifying hull: no page can prune, meters must match the
+    # unpruned cost to the byte and request
+    vs = np.arange(0, N, 5)
+    filt = LabelFilter(vt, ~L("Z"))
+    m_un, m = IOMeter(), IOMeter()
+    want = retrieve_neighbors_batch(adj, vs, TPS, m_un)
+    filt.charge(m_un)
+    got = retrieve_neighbors_batch(adj, vs, TPS, m, engine, filter=filt)
+    assert got == want
+    assert (m.nbytes, m.nrequests) == (m_un.nbytes, m_un.nrequests)
+
+
+@pytest.mark.parametrize("engine", engines())
+def test_empty_hull_prunes_every_page(adj, vt, engine):
+    col = adj.table[adj.value_col].encoded
+    filt = LabelFilter(vt, L("Z"))
+    m = IOMeter()
+    before = col.prune_stats.pages_pruned
+    got = retrieve_neighbors_batch(adj, np.arange(0, N, 3), TPS, m,
+                                   engine, filter=filt)
+    assert got.count() == 0
+    assert col.prune_stats.pages_pruned > before
+    # only the offsets gather + label metadata are left to charge
+    m_meta = IOMeter()
+    adj.edge_ranges_batch(np.arange(0, N, 3), m_meta)
+    filt.charge(m_meta)
+    assert (m.nbytes, m.nrequests) == (m_meta.nbytes, m_meta.nrequests)
+
+
+@pytest.mark.parametrize("engine", engines())
+def test_numeric_filter_matches_bruteforce(adj, vt, engine):
+    age = np.asarray(vt.table["age"].values)
+    score = np.asarray(vt.table["score"].values)
+    filt = NumericFilter(vt, AGE.between(30, 90) & (SCORE >= 10))
+    qual = (age >= 30) & (age < 90) & (score >= 10)
+    np.testing.assert_array_equal(
+        np.flatnonzero(filt.mask_ids(np.arange(N), engine)),
+        np.flatnonzero(qual))
+    vs = np.arange(0, N, 4)
+    got = retrieve_neighbors_batch(adj, vs, TPS, engine=engine,
+                                   filter=filt)
+    want = retrieve_neighbors_batch(adj, vs, TPS).intersect(filt.pac(TPS))
+    assert got == want
+    np.testing.assert_array_equal(got.to_ids(), want.to_ids())
+
+
+def test_numeric_filter_zone_maps_skip_property_pages(vt):
+    # the filter's own evaluation is statistics-pruned: an id-correlated
+    # property with a narrow range reads only the qualifying pages
+    filt = NumericFilter(vt, AGE.between(0, 16))
+    filt.charge(None)
+    assert filt.prop_pages_skipped > 0
+    stats = vt.table["age"].page_stats()
+    assert filt.prop_pages_read < len(stats)
+    # and the charge replays identically
+    m1, m2 = IOMeter(), IOMeter()
+    filt.charge(m1)
+    filt.charge(m2)
+    assert (m1.nbytes, m1.nrequests) == (m2.nbytes, m2.nrequests)
+    assert m1.nbytes > 0
+
+
+def test_numeric_filter_rejects_label_leaves(vt):
+    with pytest.raises(TypeError):
+        NumericFilter(vt, L("A") & (AGE >= 3))
+
+
+def test_unknown_page_stats_never_prune(adj):
+    col = adj.table[adj.value_col].encoded
+    pages = np.arange(len(col.pages), dtype=np.int64)
+    kept, mask = prune_page_list(col, pages, (0, 1))
+    assert mask is not None and len(kept) < len(pages)
+    # degrade one surviving page's stats to unknown (vmax < vmin with
+    # rows present): it must be kept no matter the hull
+    victim = int(kept[0])
+    pg = col.pages[victim]
+    saved = (pg.vmin, pg.vmax)
+    pg.vmin, pg.vmax = 0, -1
+    col._hull_cache = None
+    try:
+        kept2, _ = prune_page_list(col, pages, (N + 5, N + 6))
+        assert victim in kept2.tolist()
+        pmin, pmax, prunable = page_hulls(col)
+        assert not prunable[victim]
+    finally:
+        pg.vmin, pg.vmax = saved
+        col._hull_cache = None
+
+
+@pytest.mark.parametrize("engine", engines())
+def test_khop_pruning_parity_host_vs_fused(adj, vt, engine):
+    filt = LabelFilter(vt, L("A"))
+    seeds = np.arange(0, N, 11)
+    m_host = IOMeter()
+    want = k_hop(adj, seeds, 2, m_host, engine="numpy", filter=filt)
+    m = IOMeter()
+    got = k_hop(adj, seeds, 2, m, engine=engine, filter=filt,
+                fused=None if engine != "numpy" else False)
+    np.testing.assert_array_equal(got, want)
+    assert (m.nbytes, m.nrequests) == (m_host.nbytes, m_host.nrequests)
+
+
+@pytest.mark.parametrize("engine", engines())
+def test_delta_union_respects_all_three_granularities(vt, engine):
+    # partition hulls + page zone maps on the base, segment zone maps on
+    # the mutable plane -- ids still equal the exact oracle
+    from repro.core.delta_segment import attach_delta
+    adj = _local_graph()
+    col = adj.table[adj.value_col].encoded
+    partition_column(col, 4)
+    delta = attach_delta(adj)
+    rng = np.random.default_rng(9)
+    src = rng.integers(0, N, 64)
+    dst = rng.integers(N // 2, N, 64)  # provably outside L("A")'s hull
+    delta.ingest(src, dst)
+    filt = LabelFilter(vt, L("A"))
+    vs = np.arange(0, N, 7)
+    before = delta.segments_pruned
+    got = retrieve_neighbors_batch(adj, vs, TPS, engine=engine,
+                                   filter=filt)
+    # brute-force oracle over base + delta edges
+    base = retrieve_neighbors_batch(adj, vs, TPS)
+    want = base.intersect(filt.pac(TPS)).to_ids()
+    np.testing.assert_array_equal(got.to_ids(), want)
+    assert col.prune_stats.pages_pruned > 0
+    assert delta.segments_pruned > before
+
+
+@pytest.mark.parametrize("engine", engines(kernel_only=True))
+def test_pruned_steady_state_does_not_retrace(adj, vt, engine):
+    from repro.kernels import _pad
+    filt = LabelFilter(vt, L("A"))
+    rng = np.random.default_rng(1)
+
+    def tick():
+        vs = np.sort(rng.choice(N, int(rng.integers(20, 60)),
+                                replace=False))
+        retrieve_neighbors_batch(adj, vs, TPS, engine=engine, filter=filt)
+
+    # warm the pow2 ladder until varying batches stop tracing: the
+    # pruned page mask must ship as staged *data*, never as a shape
+    stable = 0
+    for _ in range(30):
+        before = _pad.trace_count()
+        tick()
+        stable = stable + 1 if _pad.trace_count() == before else 0
+        if stable >= 3:
+            break
+    assert stable >= 3  # the size classes converged at all
+    before = _pad.trace_count()
+    for _ in range(5):
+        tick()
+    assert _pad.trace_count() == before
+
+
+@pytest.mark.parametrize("engine", engines())
+def test_serving_surfaces_pruning_counters(adj, vt, engine):
+    from repro.serve.retrieval import GraphRetriever
+    from repro.core.table import TokensColumn
+    tok = TokensColumn("tokens",
+                       [np.arange(8, dtype=np.int32)] * N, PAGE)
+    r = GraphRetriever(adj, tok, max_neighbors=2, engine=engine,
+                       meter=IOMeter(), page_cache_pages=None,
+                       filter_vt=vt, filter_cond=L("A"), hops=2)
+    r(np.arange(0, N, 13))
+    s = r.stats()
+    assert "pruning" in s
+    p = s["pruning"]
+    assert p["pages_pruned"] > 0 and p["io_saved_bytes"] > 0
+    assert p["pages_considered"] >= p["pages_pruned"]
+    assert "delta_segments_pruned" in p and "partitions_stats_pruned" in p
